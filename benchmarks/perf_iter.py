@@ -1,0 +1,127 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf iteration tool: lower one cell, print the three roofline terms.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch grok-1-314b \
+      --shape train_4k [--opt] [--accum 16] [--top-collectives]
+
+Used for the hypothesis -> change -> measure loop recorded in
+EXPERIMENTS.md §Perf; --opt enables the optimized rule set, other flags
+override single knobs so each hypothesis is isolated.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.analysis import hlo as H  # noqa: E402
+from repro.analysis import roofline as R  # noqa: E402
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--top-collectives", action="store_true")
+    ap.add_argument("--top-dots", action="store_true")
+    args = ap.parse_args()
+
+    spec = ARCHS[args.arch]
+    if args.accum is not None:
+        spec = dataclasses.replace(
+            spec, grad_accum={**spec.grad_accum, args.shape: args.accum})
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    t0 = time.time()
+    cell = steps_mod.build_cell(args.arch, spec, shape, mesh, opt=args.opt)
+    compiled = steps_mod.lower_cell(cell).compile()
+    compile_s = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    text = compiled.as_text()
+    rl = R.analyze(compiled, spec.config(),
+                   shape.kind, shape.seq_len, shape.global_batch, mesh.size,
+                   hlo_text=text, grad_accum=spec.accum_for(shape.name),
+                   fsdp=spec.fsdp,
+                   opt_state_bytes=2 if spec.optimizer_state_dtype ==
+                   "bfloat16" else 4)
+    mode = "opt" if args.opt else "baseline"
+    print(f"\n== {args.arch}:{args.shape} [{mode}] "
+          f"accum={spec.accum_for(shape.name)} "
+          f"mesh={'2x16x16' if args.multi_pod else '16x16'} "
+          f"(compile {compile_s:.0f}s) ==")
+    print(f"peak memory/dev : {peak / 2**30:9.2f} GiB "
+          f"{'(FITS 16G)' if peak < 16 * 2**30 else '(OVER!)'}")
+    print(f"compute term    : {rl.compute_s:9.4f} s "
+          f"({rl.flops_per_device:.3e} FLOP/dev)")
+    print(f"memory term     : {rl.memory_s:9.4f} s (analytic; "
+          f"hlo-upper {rl.hlo_memory_s:.2f} s)")
+    print(f"collective term : {rl.collective_s:9.4f} s "
+          f"({rl.wire_bytes_per_device / 2**30:.2f} GiB/dev wire)")
+    print(f"dominant        : {rl.dominant}")
+    print(f"useful FLOPs    : {rl.useful_flops_ratio:.3f} "
+          f"(MODEL 6ND/2ND vs compiled)")
+    dom_s = max(rl.compute_s, rl.memory_s, rl.collective_s)
+    useful_s = rl.model_flops_total / (R.PEAK_FLOPS * mesh.size)
+    print(f"roofline frac   : {useful_s / dom_s:.3f} "
+          f"(useful-compute-time / dominant-term)")
+    print(f"wire by kind    : "
+          + ", ".join(f"{k}={v / 2**30:.2f}G"
+                      for k, v in sorted(rl.collectives.wire_bytes.items())))
+
+    if args.top_collectives or args.top_dots:
+        comps, entry = H.parse_computations(text)
+        from collections import defaultdict
+        stack, seen = [(entry, 1.0)], defaultdict(float)
+        while stack:
+            name, mult = stack.pop()
+            comp = comps.get(name)
+            if comp is None:
+                continue
+            seen[name] += mult
+            for op in comp.ops:
+                if op.kind == "while":
+                    m = H._TRIP_RE.search(op.attrs)
+                    trips = float(m.group(1)) if m else 1.0
+                    b = H._BODY_RE.search(op.attrs)
+                    if b:
+                        stack.append((b.group(1), mult * trips))
+                elif op.kind == "fusion" and args.top_dots:
+                    m = H._CALLS_RE.search(op.attrs)
+                    if m:
+                        stack.append((m.group(1), mult))
+        rows = []
+        for name, mult in seen.items():
+            comp = comps[name]
+            for op in comp.ops:
+                base = op.kind.replace("-start", "")
+                if args.top_collectives and base in H._COLLECTIVES \
+                        and not op.kind.endswith("-done"):
+                    rows.append((mult * H._type_bytes(op.type), mult,
+                                 op.line[:120]))
+                if args.top_dots and op.kind == "dot":
+                    rows.append((mult * H._dot_flops(op, comp), mult,
+                                 op.line[:120]))
+        rows.sort(reverse=True)
+        label = "collectives" if args.top_collectives else "dots"
+        print(f"\ntop {label}:")
+        for w, mult, line in rows[:10]:
+            unit = w / 2**30 if args.top_collectives else w
+            print(f"  {unit:12.3e} x{mult:5.0f} {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: a JAX/Pallas reproduction of "Sequencing on Silicon" (CS.AR 2025).
+
+A production-grade framework for mobile-genomics ML: CNN basecalling (CTC),
+edit-distance/alignment engines, pathogen detection, plus a multi-pod
+distributed runtime exercised over the assigned architecture pool.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,180 @@
+"""Three-term roofline from a compiled dry-run cell (TPU v5e constants).
+
+  compute_s    = weighted HLO dot FLOPs / 197 TF      (analysis/hlo.py)
+  memory_s     = max(analytic HBM model, see below) / 819 GB/s
+  collective_s = ring-model wire bytes / 50 GB/s/link
+
+FLOPs and collectives come from the weighted HLO walk (while bodies x trip
+count).  The *memory* term uses an analytic model instead of raw HLO
+fusion-boundary traffic: the CPU XLA backend fuses far less aggressively
+than the TPU backend (measured 20-70x inflation from f32 norm chains and
+SPMD repartition copies), so the HLO number is reported separately as
+``hlo_memory_s`` — an upper bound, useful for spotting regressions, not for
+the bottleneck call.
+
+Analytic HBM model per device per step (bytes):
+  train:   3x param reads (fwd + bwd + remat-fwd) + param write
+           + opt moments read+write + f32 grad accum read+write
+           + 2x layer-input checkpoints (write + read)
+           + ACT_ALPHA x per-layer activation traffic
+  prefill: 1x param read + ACT_ALPHA activation traffic + KV write
+  decode:  1x param read + full KV cache read + KV slice write
+           (the classic decode memory wall)
+
+MODEL_FLOPS/HLO_FLOPs measures useful compute (remat pushes it to ~0.75
+on train cells; MoE dispatch overheads show up here too).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.analysis.hlo import WeightedCost, analyze_hlo
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s effective per link
+ACT_ALPHA = 14               # residual-stream touches per layer (fwd+bwd)
+
+
+def model_params(cfg: ModelConfig, *, active: bool = False) -> int:
+    """Closed-form N (total) or N_active (MoE top-k + shared only)."""
+    if not active or cfg.num_experts == 0:
+        return cfg.param_count_estimate()
+    dense_like = dataclasses.replace(
+        cfg, num_experts=cfg.experts_per_token)
+    return dense_like.param_count_estimate()
+
+
+def model_flops(cfg: ModelConfig, kind: str, seq_len: int, global_batch: int,
+                *, decoder_frac: Optional[int] = None) -> float:
+    """6*N*D (train) or 2*N*D (inference), N = active params, D = tokens."""
+    n = model_params(cfg, active=True)
+    if kind == "train":
+        tokens = global_batch * seq_len
+        if cfg.family == "encdec":
+            tokens = global_batch * (seq_len + seq_len
+                                     // (decoder_frac or cfg.decoder_train_frac))
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        return 2.0 * n * global_batch * seq_len
+    return 2.0 * n * global_batch
+
+
+def _mesh_extents(n_devices: int) -> tuple[int, int]:
+    """(data-like extent incl. pod, model extent) for the production meshes."""
+    model = 16
+    return n_devices // model, model
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, seq_len: int) -> float:
+    if cfg.family == "encdec":
+        per_tok = 2 * cfg.num_layers * cfg.kv_dim * 2
+        cross = 2 * cfg.num_layers * 1500 * cfg.kv_dim * 2
+        return batch * (seq_len * per_tok + cross)
+    n_attn = cfg.num_blocks * cfg.attn_layers_per_block
+    kv = batch * seq_len * 2 * n_attn * cfg.kv_dim * 2
+    n_mamba = cfg.num_blocks * cfg.mamba_layers_per_block
+    ssm = batch * n_mamba * (cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim
+                             * 4 + (cfg.ssm_conv_width - 1)
+                             * (cfg.ssm_d_inner + 2 * cfg.ssm_state) * 2)
+    return kv + ssm
+
+
+def analytic_memory_bytes(cfg: ModelConfig, kind: str, seq_len: int,
+                          global_batch: int, n_devices: int, *,
+                          grad_accum: int = 1, fsdp: bool = False,
+                          opt_state_bytes: int = 4) -> float:
+    data_ext, model_ext = _mesh_extents(n_devices)
+    n_total = model_params(cfg)
+    n_active = model_params(cfg, active=True)
+    # dense/attention params are read on every data shard; expert params are
+    # read only by their owner (EP), approximated via the active/total split
+    expert_shards = min(data_ext, max(cfg.num_experts, 1))
+    p_read_local = (n_active / model_ext
+                    + max(n_total - n_active, 0) / (model_ext * expert_shards))
+    p_state_local = n_total / (model_ext * (data_ext if fsdp else 1))
+    tokens_local = global_batch * seq_len / data_ext
+    d = cfg.d_model
+    layers = cfg.num_layers + cfg.encoder_layers
+
+    if kind == "train":
+        act_stream = tokens_local * d * 2
+        traffic = (
+            3 * p_read_local * 2                      # fwd, bwd, remat reads
+            + p_state_local * 2                       # param write
+            + p_state_local * 2 * 2 * opt_state_bytes  # m, v read+write
+            + p_state_local * 2 * 4                   # grad accum r+w (f32)
+            + 2 * layers * act_stream                 # checkpoint w+r
+            + ACT_ALPHA * layers * act_stream         # recompute traffic
+        )
+        return traffic
+    if kind == "prefill":
+        act_stream = tokens_local * d * 2
+        return (p_read_local * 2 + ACT_ALPHA / 2 * layers * act_stream
+                + kv_cache_bytes(cfg, global_batch, seq_len) / n_devices)
+    # decode: read all local params + the local KV cache slice, write 1 token
+    cache_local = kv_cache_bytes(cfg, global_batch, seq_len) / n_devices
+    return p_read_local * 2 + cache_local
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float       # analytic
+    hlo_bytes_per_device: float   # fusion-boundary upper bound
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    hlo_memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_flops_ratio: float
+    collectives: WeightedCost
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "hlo_memory_s": self.hlo_memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collective_ops": self.collectives.collective_ops,
+            "collective_wire_bytes": self.collectives.wire_bytes,
+        }
+
+
+def analyze(compiled, cfg: ModelConfig, kind: str, seq_len: int,
+            global_batch: int, n_devices: int,
+            hlo_text: Optional[str] = None, *, grad_accum: int = 1,
+            fsdp: bool = False, opt_state_bytes: int = 4) -> Roofline:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    wc = analyze_hlo(text, n_devices)
+    flops = wc.flops
+    abytes = analytic_memory_bytes(
+        cfg, kind, seq_len, global_batch, n_devices, grad_accum=grad_accum,
+        fsdp=fsdp, opt_state_bytes=opt_state_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = abytes / HBM_BW
+    hlo_memory_s = wc.hbm_bytes / HBM_BW
+    coll_s = wc.total_wire_bytes / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, kind, seq_len, global_batch)
+    useful = mf / max(flops * n_devices, 1.0)
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=abytes,
+        hlo_bytes_per_device=wc.hbm_bytes,
+        wire_bytes_per_device=wc.total_wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, hlo_memory_s=hlo_memory_s,
+        collective_s=coll_s, dominant=dominant, model_flops_total=mf,
+        useful_flops_ratio=useful, collectives=wc)

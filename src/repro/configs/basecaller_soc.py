@@ -1,0 +1,16 @@
+"""The paper's own architecture: the 6-layer CNN basecaller (Sec III).
+
+Not part of the assigned LM pool — this is the SoC's workload, exposed
+through the same config registry so examples/launch can select it with
+``--arch basecaller-soc``.
+"""
+from repro.core.basecaller import BasecallerConfig
+
+
+def config() -> BasecallerConfig:
+    return BasecallerConfig()
+
+
+def smoke_config() -> BasecallerConfig:
+    return BasecallerConfig(
+        kernels=(3, 3, 1), channels=(16, 16, 5), strides=(1, 2, 1))

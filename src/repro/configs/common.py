@@ -1,0 +1,24 @@
+"""ArchSpec: everything the launcher needs to know about one architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    config: Callable[[], ModelConfig]
+    smoke_config: Callable[[], ModelConfig]
+    # sharding
+    fsdp: bool = False                      # ZeRO-3 param sharding over data
+    rules_overrides: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # trainer memory knobs per shape name (defaults applied otherwise)
+    grad_accum: dict[str, int] = dataclasses.field(default_factory=dict)
+    optimizer_state_dtype: str = "float32"  # bf16 for the giants
+    grad_accum_dtype: str = "float32"
+    notes: str = ""
+
+    def accum_for(self, shape_name: str) -> int:
+        return self.grad_accum.get(shape_name, 1)

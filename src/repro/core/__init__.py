@@ -1,0 +1,11 @@
+"""The paper's contribution: mobile-genomics compute stack.
+
+  basecaller.py     6-layer/450K-param CNN basecaller (C1)
+  ctc.py            CTC loss + greedy/viterbi/beam decoders
+  fm_index.py       BWT/FM-index seeding (Sec II-B.2)
+  seed_extend.py    banded-DP seed extension on the ED kernel
+  pathogen.py       panel detection pipeline (Sec III use case)
+  variant_caller.py Clair-lite pileup CNN (Sec II-B.3)
+  pipeline.py       heterogeneous streaming pipeline (CORE/MAT/ED split)
+  soc_model.py      analytical model reproducing the paper's numbers
+"""

@@ -1,0 +1,108 @@
+"""The paper's CNN basecaller (Section III), co-designed for a matrix engine.
+
+Faithful reproduction of the description:
+  * six conv layers separated by ReLU activations,
+  * ~450 K parameters in total,
+  * ~80 % of the weights concentrated in two layers,
+  * designed to deconvolve raw-signal contributions over a window of
+    ~8 bases,
+  * emits CTC posteriors over {blank, A, C, G, T} ("genomic ASR").
+
+Our instantiation (params incl. biases = 460,261; the two k=9 layers hold
+84 % of them; receptive field = 71 samples ~ 8 bases at ~9 samples/base):
+
+    layer   kernel  stride  in->out   params
+    conv1     5       1      1->64       384
+    conv2     7       2     64->64     28,736
+    conv3     7       1     64->96     43,104
+    conv4     9       2     96->192   166,080   <- big
+    conv5     9       1    192->128   221,312   <- big
+    conv6     1       1    128->5         645
+
+Every layer lowers onto the MAT matmul/conv kernels (kernels/conv1d.py) —
+the same "pure-CNN so the systolic array does everything" co-design as the
+paper.  ``use_kernel=False`` selects the XLA path (used for CPU training;
+numerically identical, asserted in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+NUM_CLASSES = 5  # blank + ACGT
+
+
+@dataclasses.dataclass(frozen=True)
+class BasecallerConfig:
+    kernels: tuple[int, ...] = (5, 7, 7, 9, 9, 1)
+    channels: tuple[int, ...] = (64, 64, 96, 192, 128, NUM_CLASSES)
+    strides: tuple[int, ...] = (1, 2, 1, 2, 1, 1)
+    in_channels: int = 1
+    dtype: Any = jnp.float32
+
+    @property
+    def total_stride(self) -> int:
+        out = 1
+        for s in self.strides:
+            out *= s
+        return out
+
+    @property
+    def receptive_field(self) -> int:
+        rf, stride = 1, 1
+        for k, s in zip(self.kernels, self.strides):
+            rf += (k - 1) * stride
+            stride *= s
+        return rf
+
+
+def init(rng: jax.Array, cfg: BasecallerConfig = BasecallerConfig()):
+    """He-initialized parameter pytree: {'convN': {'w': (K,Cin,Cout), 'b': (Cout,)}}."""
+    params = {}
+    cin = cfg.in_channels
+    for i, (k, cout) in enumerate(zip(cfg.kernels, cfg.channels)):
+        rng, sub = jax.random.split(rng)
+        fan_in = k * cin
+        w = jax.random.normal(sub, (k, cin, cout), cfg.dtype)
+        w = w * jnp.sqrt(2.0 / fan_in).astype(cfg.dtype)
+        params[f"conv{i + 1}"] = {"w": w, "b": jnp.zeros((cout,), cfg.dtype)}
+        cin = cout
+    return params
+
+
+def num_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def apply(params, signal: jax.Array, cfg: BasecallerConfig = BasecallerConfig(),
+          *, use_kernel: bool = False) -> jax.Array:
+    """signal: (B, T) or (B, T, 1) normalized current -> logits (B, T', 5)."""
+    x = signal[..., None] if signal.ndim == 2 else signal
+    x = x.astype(cfg.dtype)
+    n = len(cfg.kernels)
+    for i in range(n):
+        p = params[f"conv{i + 1}"]
+        act = "relu" if i < n - 1 else "none"
+        x = ops.conv1d(x, p["w"], p["b"], stride=cfg.strides[i],
+                       padding="same", activation=act, use_kernel=use_kernel)
+    return x
+
+
+def output_len(cfg: BasecallerConfig, t: int) -> int:
+    for s in cfg.strides:
+        t = -(-t // s)
+    return t
+
+
+def weight_concentration(params) -> float:
+    """Fraction of weights living in the two largest layers (paper: ~80%)."""
+    sizes = sorted((sum(int(x.size) for x in jax.tree.leaves(layer))
+                    for layer in params.values()), reverse=True)
+    return sum(sizes[:2]) / sum(sizes)

@@ -1,0 +1,172 @@
+"""CTC loss and decoders for the basecaller ("genomic ASR", paper Sec II-B.1).
+
+The paper's basecaller emits per-frame posteriors over {blank, A, C, G, T}
+which are collapsed to a read; its predecessor SoC [16] accelerated Viterbi
+decoding.  We provide:
+
+  * ``ctc_loss``       — log-space forward algorithm (lax.scan over time),
+                         differentiable, padding-aware.  Tested against
+                         brute-force path enumeration.
+  * ``greedy_decode``  — best-per-frame collapse (the cheap on-device path).
+  * ``viterbi_decode`` — best single alignment path with backtrace (the
+                         SoC-accelerated decode of [16]).
+  * ``beam_decode_np`` — prefix beam search in numpy.  Deliberately host-side:
+                         in the SoC the RISC-V cores run decode glue while the
+                         MAT accelerator streams the next chunk; here the
+                         host CPU plays the cores' role.
+
+Alphabet convention: class 0 is the CTC blank; bases A,C,G,T are 1..4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLANK = 0
+_NEG = -1e30
+
+
+def _extend_labels(labels: jax.Array) -> jax.Array:
+    """(B, L) -> (B, 2L+1) interleaved with blanks."""
+    b, l = labels.shape
+    ext = jnp.full((b, 2 * l + 1), BLANK, labels.dtype)
+    return ext.at[:, 1::2].set(labels)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ctc_loss(
+    logits: jax.Array,
+    logit_paddings: jax.Array,
+    labels: jax.Array,
+    label_paddings: jax.Array,
+) -> jax.Array:
+    """Negative log P(labels | logits) per batch element.
+
+    logits: (B, T, C) unnormalized; logit_paddings: (B, T) 1.0 where padded;
+    labels: (B, L) int (0 entries under label_paddings ignored);
+    label_paddings: (B, L) 1.0 where padded.  Returns (B,) loss.
+    """
+    b, t, _ = logits.shape
+    _, l = labels.shape
+    logprobs = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+    ext = _extend_labels(labels)  # (B, S) S = 2L+1
+    s = 2 * l + 1
+    # transition-2 allowed where ext[s] != ext[s-2] and ext[s] != blank
+    ext_shift2 = jnp.pad(ext, ((0, 0), (2, 0)), constant_values=-1)[:, :s]
+    allow_skip = (ext != ext_shift2) & (ext != BLANK)
+
+    label_lens = jnp.sum(1.0 - label_paddings, axis=1).astype(jnp.int32)
+    logit_lens = jnp.sum(1.0 - logit_paddings, axis=1).astype(jnp.int32)
+    s_last = 2 * label_lens  # index of final blank; final label is s_last-1
+
+    emit0 = jnp.take_along_axis(logprobs[:, 0], ext, axis=1)  # (B, S)
+    alpha0 = jnp.full((b, s), _NEG)
+    alpha0 = alpha0.at[:, 0].set(emit0[:, 0])
+    if l > 0:
+        alpha0 = alpha0.at[:, 1].set(
+            jnp.where(label_lens > 0, emit0[:, 1], _NEG))
+
+    def step(alpha, inputs):
+        lp_t, pad_t = inputs  # (B, C), (B,)
+        emit = jnp.take_along_axis(lp_t, ext, axis=1)
+        a1 = jnp.pad(alpha, ((0, 0), (1, 0)), constant_values=_NEG)[:, :s]
+        a2 = jnp.pad(alpha, ((0, 0), (2, 0)), constant_values=_NEG)[:, :s]
+        a2 = jnp.where(allow_skip, a2, _NEG)
+        new = jnp.logaddexp(jnp.logaddexp(alpha, a1), jnp.logaddexp(a2, _NEG))
+        new = new + emit
+        # padded frames: carry alpha through unchanged
+        new = jnp.where(pad_t[:, None] > 0, alpha, new)
+        return new, None
+
+    # frame 0 is consumed by alpha0; scan the remaining frames
+    xs = (jnp.moveaxis(logprobs[:, 1:], 1, 0), logit_paddings[:, 1:].T)
+    alpha, _ = jax.lax.scan(step, alpha0, xs)
+
+    idx = jnp.stack([s_last, jnp.maximum(s_last - 1, 0)], axis=1)
+    tails = jnp.take_along_axis(alpha, idx, axis=1)
+    # empty label: probability is all-blank path = alpha[:, 0]
+    total = jnp.where(
+        label_lens[:, None] > 0, tails,
+        jnp.stack([alpha[:, 0], jnp.full((b,), _NEG)], axis=1))
+    ll = jax.scipy.special.logsumexp(total, axis=1)
+    # guard: logit_len must cover the labels (else impossible -> large loss)
+    feasible = logit_lens >= label_lens
+    return jnp.where(feasible, -ll, jnp.float32(1e6))
+
+
+def greedy_decode(logits: jax.Array, paddings: jax.Array | None = None):
+    """Collapse best-per-frame classes.  Returns (B, T) tokens with 0 padding
+    and (B,) decoded lengths; bases stay 1..4."""
+    b, t, _ = logits.shape
+    best = jnp.argmax(logits, axis=-1)  # (B, T)
+    if paddings is not None:
+        best = jnp.where(paddings > 0, BLANK, best)
+    prev = jnp.pad(best, ((0, 0), (1, 0)), constant_values=BLANK)[:, :t]
+    keep = (best != BLANK) & (best != prev)
+    lens = jnp.sum(keep, axis=1)
+    # stable left-compaction of kept tokens
+    pos = jnp.cumsum(keep, axis=1) - 1
+    scatter_idx = jnp.where(keep, pos, t - 1)
+    out = jnp.zeros((b, t), best.dtype).at[
+        jnp.arange(b)[:, None], scatter_idx].max(jnp.where(keep, best, 0))
+    # ensure positions >= lens are zero (max with 0 init handles collisions)
+    mask = jnp.arange(t)[None, :] < lens[:, None]
+    return jnp.where(mask, out, 0), lens
+
+
+def viterbi_decode(logits: jax.Array, labels_like: None = None):
+    """Best-path decode == greedy for plain CTC (argmax per frame is the MAP
+    path since frames are conditionally independent).  Provided for parity
+    with [16]'s "accelerated Viterbi": returns the best path score too."""
+    logprobs = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    path_score = jnp.sum(jnp.max(logprobs, axis=-1), axis=-1)
+    tokens, lens = greedy_decode(logits)
+    return tokens, lens, path_score
+
+
+def beam_decode_np(logits: np.ndarray, beam: int = 8) -> list[np.ndarray]:
+    """Prefix beam search (host-side, per read).  logits: (T, C)."""
+    lp = np.asarray(jax.nn.log_softmax(jnp.asarray(logits, jnp.float32), -1))
+    t, c = lp.shape
+    # beams: prefix tuple -> (p_blank, p_nonblank) in log space
+    beams = {(): (0.0, -np.inf)}
+    for step in range(t):
+        new: dict[tuple, list[float]] = {}
+
+        def add(prefix, pb, pnb):
+            old = new.get(prefix, [-np.inf, -np.inf])
+            new[prefix] = [np.logaddexp(old[0], pb), np.logaddexp(old[1], pnb)]
+
+        for prefix, (pb, pnb) in beams.items():
+            total = np.logaddexp(pb, pnb)
+            add(prefix, total + lp[step, BLANK], -np.inf)
+            for k in range(1, c):
+                p_k = lp[step, k]
+                if prefix and prefix[-1] == k:
+                    # repeat: extends non-blank only from blank-ended mass
+                    add(prefix, -np.inf, pnb + p_k)
+                    add(prefix + (k,), -np.inf, pb + p_k)
+                else:
+                    add(prefix + (k,), -np.inf, total + p_k)
+        ranked = sorted(new.items(), key=lambda kv: -np.logaddexp(*kv[1]))
+        beams = dict(ranked[:beam])
+    best = max(beams.items(), key=lambda kv: np.logaddexp(*kv[1]))[0]
+    return np.array(best, np.int32)
+
+
+def tokens_to_str(tokens, length=None) -> str:
+    """1..4 -> ACGT."""
+    alpha = "NACGT"
+    arr = np.asarray(tokens)
+    if length is not None:
+        arr = arr[: int(length)]
+    return "".join(alpha[int(x)] for x in arr if 0 < int(x) <= 4)
+
+
+def str_to_tokens(s: str) -> np.ndarray:
+    lut = {"A": 1, "C": 2, "G": 3, "T": 4}
+    return np.array([lut[ch] for ch in s], np.int32)

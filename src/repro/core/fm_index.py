@@ -1,0 +1,122 @@
+"""BWT / FM-index seeding (paper Sec II-B.2).
+
+"The seed step, based on a contextualized reorganization of the reference
+genome (the Burrows-Wheeler Transform) and its efficient indexing (FM-index),
+allows rapid search for very short exact matches (typically ~10 bases)."
+
+Split of labor mirrors the SoC: index *construction* is host-side numpy
+(a one-time reference-preparation job, CORE work), while *search* is a
+batched, fixed-trip-count ``lax.fori_loop`` over backward-extension steps —
+thousands of seeds advance in lock-step through gather ops, which is the
+TPU-friendly reshaping of the FM-index's pointer chasing.
+
+Alphabet: tokens 1..4 (A,C,G,T); 0 is the sentinel (lexicographically
+smallest, appended once).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def suffix_array(seq: np.ndarray) -> np.ndarray:
+    """O(n log^2 n) key-doubling suffix array; seq must end with unique 0."""
+    n = len(seq)
+    rank = np.asarray(seq, np.int64).copy()
+    sa = np.argsort(rank, kind="stable")
+    tmp = np.empty(n, np.int64)
+    k = 1
+    while k < n:
+        key2 = np.full(n, -1, np.int64)
+        key2[: n - k] = rank[k:]
+        order = np.lexsort((key2, rank))
+        r_ord, k_ord = rank[order], key2[order]
+        bump = np.empty(n, np.int64)
+        bump[0] = 0
+        bump[1:] = (r_ord[1:] != r_ord[:-1]) | (k_ord[1:] != k_ord[:-1])
+        tmp[order] = np.cumsum(bump)
+        rank = tmp.copy()
+        sa = order
+        if rank[sa[-1]] == n - 1:
+            break
+        k *= 2
+    return sa.astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class FMIndex:
+    """Dense-checkpoint FM-index over a 1..4 token genome."""
+    sa: np.ndarray          # (n+1,) suffix array of seq+[0]
+    occ: np.ndarray         # (n+2, 4) cumulative occurrences of 1..4 in BWT
+    counts: np.ndarray      # (6,) C array: counts[c] = #symbols < c, c in 0..5
+    length: int             # genome length (without sentinel)
+
+    @staticmethod
+    def build(genome: np.ndarray) -> "FMIndex":
+        seq = np.concatenate([np.asarray(genome, np.int64), [0]])
+        n = len(seq)
+        sa = suffix_array(seq)
+        bwt = seq[(sa - 1) % n]
+        occ = np.zeros((n + 1, 4), np.int32)
+        for c in range(1, 5):
+            occ[1:, c - 1] = np.cumsum(bwt == c)
+        hist = np.bincount(seq, minlength=5)
+        counts = np.zeros(6, np.int64)
+        counts[1:] = np.cumsum(hist)[:5]
+        return FMIndex(sa=sa, occ=occ, counts=counts, length=len(genome))
+
+    def device_arrays(self):
+        """Arrays used by the jitted batched search."""
+        return {
+            "occ": jnp.asarray(self.occ),
+            "counts": jnp.asarray(self.counts),
+            "sa": jnp.asarray(self.sa),
+        }
+
+
+@functools.partial(jax.jit, static_argnames=("max_hits",))
+def backward_search(index_arrays, seeds: jax.Array, *, max_hits: int = 8):
+    """Batched exact search.  seeds: (P, k) tokens 1..4.
+
+    Returns (count (P,), positions (P, max_hits) with -1 padding).
+    Positions are genome offsets of the *first* seed base.
+    """
+    occ, counts, sa = (index_arrays["occ"], index_arrays["counts"],
+                       index_arrays["sa"])
+    p, k = seeds.shape
+    idx_t = jnp.int32  # genomes < 2^31 (x64 is off in this deployment)
+    lo0 = jnp.zeros((p,), idx_t)
+    hi0 = jnp.full((p,), occ.shape[0] - 1, idx_t)  # n+1 rows -> n+1 suffixes
+
+    def step(i, lohi):
+        lo, hi = lohi
+        c = seeds[:, k - 1 - i].astype(idx_t)  # backward: last char first
+        cc = counts[c].astype(idx_t)
+        occ_lo = occ[lo, c - 1].astype(idx_t)
+        occ_hi = occ[hi, c - 1].astype(idx_t)
+        return cc + occ_lo, cc + occ_hi
+
+    lo, hi = jax.lax.fori_loop(0, k, step, (lo0, hi0))
+    count = (hi - lo).astype(jnp.int32)
+    offs = jnp.arange(max_hits, dtype=idx_t)[None, :]
+    idx = jnp.minimum(lo[:, None] + offs, sa.shape[0] - 1)
+    pos = sa[idx]
+    valid = offs < count[:, None]
+    pos = jnp.where(valid, pos, -1)
+    return count, pos
+
+
+def search_np(index: FMIndex, seed: np.ndarray):
+    """Host-side single-seed reference implementation (oracle for tests)."""
+    lo, hi = 0, len(index.sa)
+    for ch in seed[::-1]:
+        c = int(ch)
+        lo = index.counts[c] + index.occ[lo, c - 1]
+        hi = index.counts[c] + index.occ[hi, c - 1]
+        if lo >= hi:
+            return np.zeros(0, np.int64)
+    return np.sort(index.sa[lo:hi])

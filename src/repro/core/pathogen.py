@@ -1,0 +1,133 @@
+"""Pathogen detection — the paper's flagship use case (Sec III).
+
+"Together [MAT + ED + cores] can serve as an engine for rapid pathogen
+detection: the basecaller converting raw data to reads with the help of MAT,
+and ED quickly comparing it to some sample of a pathogenic genome.  In the
+case of viruses where many pandemic causing viruses have genomes below 30K
+bases in length, the opportunity to house sufficient computing within a
+Mobile-tier platform ... is good."
+
+Two comparison engines against a panel of (<=30 Kbase) genomes:
+  * ``ed`` — the paper's direct mode: tile each panel genome into windows and
+    Smith-Waterman every read against every window on the ED kernel.  Dense,
+    string-independent, embarrassingly batched — exactly the PE-array
+    workload.
+  * ``fm`` — seed-and-extend per panel genome (fm_index + seed_extend); the
+    "lightweight alignment" configuration.
+
+``detect`` aggregates read-level classifications into per-pathogen abundance
+and a presence call.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fm_index, seed_extend
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class Panel:
+    names: list[str]
+    genomes: list[np.ndarray]          # token arrays 1..4
+    indexes: list[fm_index.FMIndex] | None = None
+
+    @staticmethod
+    def build(named_genomes: dict[str, np.ndarray],
+              with_index: bool = True) -> "Panel":
+        names = list(named_genomes)
+        genomes = [np.asarray(named_genomes[n], np.int32) for n in names]
+        indexes = ([fm_index.FMIndex.build(g) for g in genomes]
+                   if with_index else None)
+        return Panel(names=names, genomes=genomes, indexes=indexes)
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectConfig:
+    window: int = 512          # ED mode: genome tile length
+    min_read_frac: float = 0.6  # SW score threshold (fraction of max)
+    match: int = 2
+    mismatch: int = -4
+    gap: int = -2
+    min_reads: int = 5          # presence call: min classified reads
+    min_abundance: float = 0.02
+
+
+def _genome_windows(genome: np.ndarray, window: int, overlap: int):
+    stride = max(window - overlap, 1)
+    n_win = max(1, -(-(len(genome) - overlap) // stride))
+    pad = np.zeros(n_win * stride + overlap, np.int32)
+    pad[: len(genome)] = genome[: len(pad)]
+    idx = np.arange(n_win)[:, None] * stride + np.arange(window)[None, :]
+    return pad[np.minimum(idx, len(pad) - 1)]
+
+
+def score_reads_ed(reads: np.ndarray, genome: np.ndarray,
+                   cfg: DetectConfig = DetectConfig(), *, interpret=None):
+    """Best SW score of each read against any window of ``genome``.
+
+    reads: (R, L).  Returns (R,) int32 best scores.  This is the ED-engine
+    firehose: R x n_windows wavefront DPs, batched 128-wide on the VPU.
+    """
+    r, l = reads.shape
+    wins = _genome_windows(genome, cfg.window, overlap=l)
+    w = wins.shape[0]
+    q = jnp.asarray(np.repeat(reads, w, axis=0))
+    t = jnp.asarray(np.tile(wins, (r, 1)))
+    scores = ops.banded_align(
+        q, t, band=cfg.window, match=cfg.match, mismatch=cfg.mismatch,
+        gap=cfg.gap, local=True, interpret=interpret)
+    return np.asarray(scores).reshape(r, w).max(axis=1)
+
+
+@dataclasses.dataclass
+class DetectionReport:
+    counts: dict[str, int]
+    abundance: dict[str, float]
+    present: dict[str, bool]
+    read_assignment: np.ndarray   # (R,) panel index or -1
+    read_scores: np.ndarray       # (R,) best score
+
+
+def detect(panel: Panel, reads: np.ndarray,
+           cfg: DetectConfig = DetectConfig(), *, mode: str = "ed",
+           interpret=None) -> DetectionReport:
+    """Classify reads against the panel and call presence per pathogen."""
+    r, l = reads.shape
+    all_scores = np.zeros((len(panel.genomes), r), np.int64)
+    for gi, genome in enumerate(panel.genomes):
+        if mode == "ed":
+            all_scores[gi] = score_reads_ed(reads, genome, cfg,
+                                            interpret=interpret)
+        elif mode == "fm":
+            assert panel.indexes is not None
+            res = seed_extend.align_reads(
+                panel.indexes[gi], genome, reads,
+                seed_extend.AlignConfig(match=cfg.match,
+                                        mismatch=cfg.mismatch, gap=cfg.gap,
+                                        min_score_frac=cfg.min_read_frac),
+                interpret=interpret)
+            all_scores[gi] = np.where(res.accepted, res.scores, 0)
+        else:
+            raise ValueError(mode)
+
+    best = all_scores.argmax(axis=0)
+    best_score = all_scores[best, np.arange(r)]
+    threshold = cfg.min_read_frac * cfg.match * l
+    assign = np.where(best_score >= threshold, best, -1)
+
+    counts = {}
+    abundance = {}
+    present = {}
+    for gi, name in enumerate(panel.names):
+        c = int((assign == gi).sum())
+        counts[name] = c
+        abundance[name] = c / max(r, 1)
+        present[name] = (c >= cfg.min_reads
+                         and abundance[name] >= cfg.min_abundance)
+    return DetectionReport(counts=counts, abundance=abundance,
+                           present=present, read_assignment=assign,
+                           read_scores=best_score)

@@ -1,0 +1,138 @@
+"""Heterogeneous streaming pipeline — the SoC's co-design at system level.
+
+Paper Sec III: CORE1/CORE2 run "small intermediate support processes"
+(demultiplexing, primer trimming, chunking, filtering, normalization) *in
+parallel with accelerator jobs*.  The TPU analogue:
+
+  * accelerator jobs  -> jitted, batched device computations (basecall CNN,
+    ED comparisons) dispatched asynchronously (JAX dispatch returns before
+    the device finishes — the device plays MAT/ED),
+  * CORE jobs         -> host-side numpy between dispatches (decode glue,
+    demux bookkeeping) that overlap with in-flight device work,
+  * scratchpad budget -> bounded in-flight queue (``depth``), the software
+    analogue of "if sufficient scratchpad memories are committed to MAT and
+    ED".
+
+The pipeline is the end-to-end path used by examples/pathogen_detection.py:
+raw squiggle chunks -> normalize -> basecall -> CTC decode -> demux ->
+classify.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import basecaller as bc
+from repro.core import ctc
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    chunk_samples: int = 2048      # raw samples per device dispatch row
+    batch_channels: int = 32       # sensor channels batched per dispatch
+    depth: int = 2                 # in-flight device jobs (double buffering)
+    barcode_len: int = 12
+    barcode_max_dist: int = 3
+
+
+def normalize_chunk(x: np.ndarray) -> np.ndarray:
+    """Median/MAD per channel (CORE-side conditioning)."""
+    med = np.median(x, axis=-1, keepdims=True)
+    mad = np.median(np.abs(x - med), axis=-1, keepdims=True) + 1e-6
+    return ((x - med) / (1.4826 * mad)).astype(np.float32)
+
+
+def demux_reads(reads: np.ndarray, barcodes: np.ndarray, *,
+                max_dist: int = 3, interpret=None) -> np.ndarray:
+    """Assign reads to samples by barcode edit distance (paper: "a low-cost
+    un-gapped string comparison" — we use the ED kernel, which subsumes it).
+
+    reads: (R, L) with the barcode at the 5' end; barcodes: (S, Lb).
+    Returns (R,) sample index or -1.
+    """
+    r = reads.shape[0]
+    s, lb = barcodes.shape
+    prefix = reads[:, :lb]
+    q = jnp.asarray(np.repeat(prefix, s, axis=0))
+    t = jnp.asarray(np.tile(barcodes, (r, 1)))
+    d = np.asarray(ops.edit_distance(q, t, interpret=interpret))
+    d = d.reshape(r, s)
+    best = d.argmin(axis=1)
+    return np.where(d[np.arange(r), best] <= max_dist, best, -1)
+
+
+def trim_primer(tokens: np.ndarray, lens: np.ndarray, primer_len: int):
+    """Drop the first ``primer_len`` bases (CORE-side editing)."""
+    out = np.zeros_like(tokens)
+    new_lens = np.maximum(lens - primer_len, 0)
+    for i in range(tokens.shape[0]):
+        out[i, : new_lens[i]] = tokens[i, primer_len: lens[i]]
+    return out, new_lens
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    chunks: int = 0
+    device_dispatches: int = 0
+    bases_called: int = 0
+    samples_in: int = 0
+    wall_s: float = 0.0
+
+    def bases_per_s(self) -> float:
+        return self.bases_called / max(self.wall_s, 1e-9)
+
+
+class StreamingBasecallPipeline:
+    """Double-buffered basecall pipeline over an iterator of raw chunks."""
+
+    def __init__(self, params, cfg: bc.BasecallerConfig = bc.BasecallerConfig(),
+                 pipe_cfg: PipelineConfig = PipelineConfig(),
+                 *, use_kernel: bool = False):
+        self.params = params
+        self.cfg = cfg
+        self.pipe_cfg = pipe_cfg
+        self.use_kernel = use_kernel
+        self.stats = PipelineStats()
+
+    def _dispatch(self, chunk: np.ndarray) -> jax.Array:
+        sig = jnp.asarray(normalize_chunk(chunk))
+        logits = bc.apply(self.params, sig, self.cfg,
+                          use_kernel=self.use_kernel)
+        self.stats.device_dispatches += 1
+        return logits  # async: device still computing
+
+    def run(self, chunks: Iterable[np.ndarray],
+            on_read: Callable[[np.ndarray, np.ndarray], None] | None = None
+            ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+        """chunks: iterator of (channels, chunk_samples) raw signal arrays.
+
+        Yields (tokens (B, T'), lens (B,)) per chunk.  Host decode of job k
+        overlaps with device compute of job k+1 (the CORE/MAT split).
+        """
+        t0 = time.perf_counter()
+        queue: collections.deque = collections.deque()
+        for chunk in chunks:
+            self.stats.chunks += 1
+            self.stats.samples_in += chunk.size
+            queue.append(self._dispatch(chunk))
+            while len(queue) > self.pipe_cfg.depth:
+                yield self._drain_one(queue, on_read)
+        while queue:
+            yield self._drain_one(queue, on_read)
+        self.stats.wall_s = time.perf_counter() - t0
+
+    def _drain_one(self, queue, on_read):
+        logits = queue.popleft()
+        tokens, lens = ctc.greedy_decode(logits)
+        tokens_np, lens_np = np.asarray(tokens), np.asarray(lens)
+        self.stats.bases_called += int(lens_np.sum())
+        if on_read is not None:
+            on_read(tokens_np, lens_np)
+        return tokens_np, lens_np

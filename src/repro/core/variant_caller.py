@@ -1,0 +1,143 @@
+"""Lightweight pileup-based variant caller (paper Sec II-B.3).
+
+The paper positions DL variant callers (DeepVariant ~25M params; Clair-class
+models callable on CPUs/phones) as Mobile/Edge-tier workloads.  We implement
+a Clair-lite caller: aligned reads are summarized into a per-position pileup
+tensor, and a small CNN over a window around each candidate site emits
+genotype + alternate-base posteriors.  Sized (~100K params) for the Tiny/
+Mobile tier, trained end-to-end in examples/variant_calling.py.
+
+Pileup features per reference position (C=9):
+  0..3  base counts A,C,G,T (depth-normalized)
+  4     coverage (log1p, scaled)
+  5..8  reference base one-hot
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+N_FEATURES = 9
+N_GENOTYPES = 3  # hom-ref, het, hom-alt
+
+
+@dataclasses.dataclass(frozen=True)
+class CallerConfig:
+    window: int = 33
+    channels: tuple[int, ...] = (48, 96)
+    kernel: int = 5
+    hidden: int = 128
+    dtype: Any = jnp.float32
+
+
+def build_pileup(genome: np.ndarray, reads: np.ndarray,
+                 positions: np.ndarray) -> np.ndarray:
+    """(G, 9) pileup tensor from aligned reads (host-side aggregation)."""
+    g = len(genome)
+    counts = np.zeros((g, 4), np.float32)
+    r, l = reads.shape
+    for i in range(r):
+        p = int(positions[i])
+        if p < 0:
+            continue
+        end = min(p + l, g)
+        span = end - p
+        idx = genome_idx = np.arange(p, end)
+        np.add.at(counts, (idx, reads[i, :span] - 1), 1.0)
+    cov = counts.sum(axis=1)
+    feat = np.zeros((g, N_FEATURES), np.float32)
+    feat[:, :4] = counts / np.maximum(cov, 1.0)[:, None]
+    feat[:, 4] = np.log1p(cov) / 5.0
+    feat[np.arange(g), 4 + genome_clip(genome)] = 1.0
+    return feat
+
+
+def genome_clip(genome: np.ndarray) -> np.ndarray:
+    return np.clip(np.asarray(genome, np.int64), 1, 4)
+
+
+def extract_windows(pileup: np.ndarray, sites: np.ndarray,
+                    window: int) -> np.ndarray:
+    """(S, window, 9) windows centered at candidate sites."""
+    half = window // 2
+    g = pileup.shape[0]
+    pad = np.pad(pileup, ((half, half), (0, 0)))
+    idx = sites[:, None] + np.arange(window)[None, :]
+    return pad[idx]
+
+
+def candidate_sites(pileup: np.ndarray, *, min_alt_frac: float = 0.2,
+                    min_cov: float = 4.0) -> np.ndarray:
+    """Positions whose non-reference allele fraction exceeds the threshold."""
+    ref_onehot = pileup[:, 5:9]
+    alt_frac = (pileup[:, :4] * (1.0 - ref_onehot)).sum(axis=1)
+    cov = np.expm1(pileup[:, 4] * 5.0)
+    return np.nonzero((alt_frac >= min_alt_frac) & (cov >= min_cov))[0]
+
+
+def init(rng: jax.Array, cfg: CallerConfig = CallerConfig()):
+    params = {}
+    cin = N_FEATURES
+    for i, cout in enumerate(cfg.channels):
+        rng, sub = jax.random.split(rng)
+        w = jax.random.normal(sub, (cfg.kernel, cin, cout), cfg.dtype)
+        params[f"conv{i + 1}"] = {
+            "w": w * jnp.sqrt(2.0 / (cfg.kernel * cin)).astype(cfg.dtype),
+            "b": jnp.zeros((cout,), cfg.dtype),
+        }
+        cin = cout
+    rng, s1, s2, s3 = jax.random.split(rng, 4)
+    # flatten conv features over the window: the variant evidence lives in
+    # the center columns; pooling would dilute it (Clair keeps position)
+    flat = cin * cfg.window
+    params["dense"] = {
+        "w": jax.random.normal(s1, (flat, cfg.hidden), cfg.dtype)
+        * jnp.sqrt(2.0 / flat),
+        "b": jnp.zeros((cfg.hidden,), cfg.dtype),
+    }
+    params["head_gt"] = {
+        "w": jax.random.normal(s2, (cfg.hidden, N_GENOTYPES), cfg.dtype)
+        * jnp.sqrt(1.0 / cfg.hidden),
+        "b": jnp.zeros((N_GENOTYPES,), cfg.dtype),
+    }
+    params["head_alt"] = {
+        "w": jax.random.normal(s3, (cfg.hidden, 4), cfg.dtype)
+        * jnp.sqrt(1.0 / cfg.hidden),
+        "b": jnp.zeros((4,), cfg.dtype),
+    }
+    return params
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def apply(params, windows: jax.Array, cfg: CallerConfig = CallerConfig(),
+          *, use_kernel: bool = False):
+    """windows: (S, W, 9) -> (genotype logits (S,3), alt-base logits (S,4))."""
+    x = windows.astype(cfg.dtype)
+    for i in range(len(cfg.channels)):
+        p = params[f"conv{i + 1}"]
+        x = ops.conv1d(x, p["w"], p["b"], padding="same", activation="relu",
+                       use_kernel=use_kernel)
+    x = x.reshape(x.shape[0], -1)  # keep positions: flatten (W, C)
+    h = jax.nn.relu(x @ params["dense"]["w"] + params["dense"]["b"])
+    gt = h @ params["head_gt"]["w"] + params["head_gt"]["b"]
+    alt = h @ params["head_alt"]["w"] + params["head_alt"]["b"]
+    return gt, alt
+
+
+def loss_fn(params, windows, gt_labels, alt_labels, cfg: CallerConfig):
+    gt, alt = apply(params, windows, cfg)
+    gt_l = -jnp.take_along_axis(jax.nn.log_softmax(gt), gt_labels[:, None],
+                                axis=1).mean()
+    # alt base supervised only on non-hom-ref sites
+    mask = (gt_labels > 0).astype(jnp.float32)
+    alt_ll = jnp.take_along_axis(jax.nn.log_softmax(alt), alt_labels[:, None],
+                                 axis=1)[:, 0]
+    alt_l = -(alt_ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return gt_l + alt_l

@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic genomes, nanopore squiggle simulation, LM tokens."""

@@ -1,0 +1,1 @@
+"""Distributed runtime: logical sharding rules, compression, overlap."""

@@ -1,0 +1,103 @@
+"""Gradient compression for cross-pod links.
+
+The 2-pod mesh pays for every gradient all-reduce twice: once over ICI
+(within-pod, ~50 GB/s/link) and once over the slower pod interconnect.  Two
+standard compressors with error feedback:
+
+  * ``int8`` — per-leaf symmetric quantization: g ~ s * q, q in int8.
+    4x wire reduction; unbiased to first order; residual carried forward.
+  * ``topk`` — magnitude top-k with error feedback (k as a fraction);
+    transmitted as (values, indices).
+
+Both expose compress/decompress pairs shaped so the *compressed* tensor is
+what crosses the "pod" mesh axis (the trainer applies them around the pod
+all-reduce); tests check convergence parity within tolerance on a quadratic
+and on the basecaller.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"         # none | int8 | topk
+    topk_frac: float = 0.01
+    error_feedback: bool = True
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(g: jax.Array):
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_topk(g: jax.Array, frac: float):
+    gf = g.reshape(-1).astype(jnp.float32)
+    k = max(int(gf.shape[0] * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(gf), k)
+    sel = gf[idx]
+    return sel, idx, gf.shape[0]
+
+
+def decompress_topk(vals, idx, n: int, shape) -> jax.Array:
+    return jnp.zeros((n,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+def apply_compression(grads, residual, cfg: CompressionConfig):
+    """Round-trip grads through the compressor with error feedback.
+
+    Returns (effective_grads, new_residual).  In the trainer this round trip
+    brackets the pod-axis mean so only compressed bits cross pods; the
+    decompressed estimate plus carried residual is what the optimizer sees.
+    """
+    if cfg.kind == "none":
+        return grads, residual
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (r if cfg.error_feedback else 0.0)
+        if cfg.kind == "int8":
+            q, s = compress_int8(gf)
+            ghat = decompress_int8(q, s)
+        elif cfg.kind == "topk":
+            vals, idx, n = compress_topk(gf, cfg.topk_frac)
+            ghat = decompress_topk(vals, idx, n, gf.shape)
+        else:
+            raise ValueError(cfg.kind)
+        new_r = (gf - ghat) if cfg.error_feedback else r
+        return ghat.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+            jax.tree.unflatten(treedef, [o[1] for o in outs]))
+
+
+def wire_bytes(grads, cfg: CompressionConfig) -> int:
+    """Bytes that would cross the pod link per step (for EXPERIMENTS.md)."""
+    import numpy as np
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = int(np.prod(g.shape))
+        if cfg.kind == "none":
+            total += n * 4
+        elif cfg.kind == "int8":
+            total += n + 4
+        elif cfg.kind == "topk":
+            k = max(int(n * cfg.topk_frac), 1)
+            total += k * 8
+    return total

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper accelerators and assigned-arch hot spots.
+
+  matmul.py          MAT: systolic GEMM (fused bias/activation, int8 path)
+  conv1d.py          basecaller conv-as-GEMM (in-kernel im2col)
+  edit_distance.py   ED: anti-diagonal wavefront DP (levenshtein + banded NW/SW)
+  flash_attention.py blocked online-softmax attention
+  ssd_scan.py        Mamba-2 SSD chunked scan
+  ops.py             public padded/dispatching wrappers
+  ref.py             pure-jnp oracles
+"""

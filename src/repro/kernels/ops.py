@@ -1,0 +1,158 @@
+"""Public entry points for the kernel package.
+
+Each op:
+  * pads operands up to kernel block alignment,
+  * dispatches to the Pallas kernel on TPU (interpret-mode on CPU so the
+    same code path is exercised end-to-end in this container), or to the
+    pure-jnp oracle when ``use_kernel=False`` / shapes are tiny,
+  * unpads the result.
+
+The `interpret` decision is made once at import time from the backend;
+tests override it explicitly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv1d as _conv1d
+from repro.kernels import edit_distance as _ed
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import ref
+from repro.kernels import ssd_scan as _ssd
+from repro.utils.shapes import next_multiple, pad_to_multiple
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mat_mul(a, b, bias=None, *, activation: str = "none", block_m: int = 256,
+            block_n: int = 256, block_k: int = 512, out_dtype=None,
+            use_kernel: bool = True, interpret: Optional[bool] = None):
+    """activation(a @ b + bias) for arbitrary (M, K) x (K, N)."""
+    if not use_kernel:
+        return ref.matmul(a, b, bias, activation=activation, out_dtype=out_dtype)
+    interpret = _interpret_default() if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    # sublane/lane alignment: fall back to oracle for degenerate shapes
+    if m < 8 or n < 128 or k < 128:
+        return ref.matmul(a, b, bias, activation=activation, out_dtype=out_dtype)
+    ap = pad_to_multiple(pad_to_multiple(a, bm, 0), bk, 1)
+    bp = pad_to_multiple(pad_to_multiple(b, bk, 0), bn, 1)
+    biasp = pad_to_multiple(bias, bn, 0) if bias is not None else None
+    out = _mm.matmul(ap, bp, biasp, block_m=bm, block_n=bn, block_k=bk,
+                     activation=activation, out_dtype=out_dtype,
+                     interpret=interpret)
+    return out[:m, :n]
+
+
+def conv1d(x, w, bias=None, *, stride: int = 1, padding: str = "same",
+           activation: str = "none", block_t: int = 256, block_n: int = 128,
+           out_dtype=None, use_kernel: bool = True,
+           interpret: Optional[bool] = None):
+    """Conv1d over (B, T, Cin) with (K, Cin, Cout) weights."""
+    ksize = w.shape[0]
+    if padding == "same":
+        # 'same' under stride: T_out = ceil(T / stride)
+        t = x.shape[1]
+        t_out = -(-t // stride)
+        pad_total = max((t_out - 1) * stride + ksize - t, 0)
+        x = jnp.pad(x, ((0, 0), (pad_total // 2, pad_total - pad_total // 2),
+                        (0, 0)))
+    elif padding != "valid":
+        raise ValueError(padding)
+    if not use_kernel or w.shape[2] < 128 or x.shape[2] < 8:
+        return ref.conv1d(x, w, bias, stride=stride, activation=activation,
+                          out_dtype=out_dtype)
+    interpret = _interpret_default() if interpret is None else interpret
+    t_out = (x.shape[1] - ksize) // stride + 1
+    bt = min(block_t, t_out)
+    t_out_pad = next_multiple(t_out, bt)
+    # pad input so padded T_out is achievable (extra outputs are cropped)
+    t_need = (t_out_pad - 1) * stride + ksize
+    if x.shape[1] < t_need:
+        x = jnp.pad(x, ((0, 0), (0, t_need - x.shape[1]), (0, 0)))
+    cout = w.shape[2]
+    bn = min(block_n, cout)
+    wp = pad_to_multiple(w, bn, 2)
+    biasp = pad_to_multiple(bias, bn, 0) if bias is not None else None
+    out = _conv1d.conv1d(x, wp, biasp, stride=stride, block_t=bt, block_n=bn,
+                         activation=activation, out_dtype=out_dtype,
+                         interpret=interpret)
+    return out[:, :t_out, :cout]
+
+
+def edit_distance(query, target, *, block_p: int = 128,
+                  use_kernel: bool = True, interpret: Optional[bool] = None):
+    """Batched Levenshtein distance; (P, m) x (P, n) -> (P,) i32."""
+    if not use_kernel:
+        return ref.edit_distance(query, target)
+    interpret = _interpret_default() if interpret is None else interpret
+    p = query.shape[0]
+    bp = min(block_p, next_multiple(p, 8))
+    qp = pad_to_multiple(query, bp, 0)
+    tp = pad_to_multiple(target, bp, 0)
+    out = _ed.levenshtein(qp, tp, block_p=bp, interpret=interpret)
+    return out[:p]
+
+
+def banded_align(query, target, *, band: int, match: int = 2,
+                 mismatch: int = -4, gap: int = -2, local: bool = False,
+                 block_p: int = 128, use_kernel: bool = True,
+                 interpret: Optional[bool] = None):
+    """Banded NW/SW alignment scores; (P, m) x (P, n) -> (P,) i32."""
+    if not use_kernel:
+        return ref.banded_align(query, target, band=band, match=match,
+                                mismatch=mismatch, gap=gap, local=local)
+    interpret = _interpret_default() if interpret is None else interpret
+    p = query.shape[0]
+    bp = min(block_p, next_multiple(p, 8))
+    qp = pad_to_multiple(query, bp, 0)
+    tp = pad_to_multiple(target, bp, 0)
+    out = _ed.banded_align(qp, tp, band=band, match=match, mismatch=mismatch,
+                           gap=gap, local=local, block_p=bp,
+                           interpret=interpret)
+    return out[:p]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    block_q: int = 512, block_k: int = 512,
+                    use_kernel: bool = True,
+                    interpret: Optional[bool] = None):
+    """(B, Hq, Sq, D) x (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    if not use_kernel:
+        return ref.attention(q, k, v, causal=causal, scale=scale)
+    interpret = _interpret_default() if interpret is None else interpret
+    sq, skv = q.shape[2], k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        return ref.attention(q, k, v, causal=causal, scale=scale)
+    return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                               block_q=bq, block_k=bk, interpret=interpret)
+
+
+def ssd_scan(x, log_a, b, c, *, chunk: int = 256, use_kernel: bool = True,
+             interpret: Optional[bool] = None):
+    """Mamba-2 SSD over (BH, T, dh); returns y only (training path)."""
+    if not use_kernel:
+        return ref.ssd_scan(x, log_a, b, c)[0]
+    interpret = _interpret_default() if interpret is None else interpret
+    t = x.shape[1]
+    ck = min(chunk, t)
+    if t % ck:
+        tp = next_multiple(t, ck)
+        x = pad_to_multiple(x, ck, 1)
+        log_a = pad_to_multiple(log_a, ck, 1)
+        b = pad_to_multiple(b, ck, 1)
+        c = pad_to_multiple(c, ck, 1)
+        return _ssd.ssd_scan(x, log_a, b, c, chunk=ck,
+                             interpret=interpret)[:, :t]
+    return _ssd.ssd_scan(x, log_a, b, c, chunk=ck, interpret=interpret)

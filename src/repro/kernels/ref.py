@@ -1,0 +1,204 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(tests/test_kernels.py sweeps shapes & dtypes and asserts allclose).  They are
+also the CPU execution path for small problems where a kernel is overkill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "squared_relu": lambda x: jnp.square(jax.nn.relu(x)),
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+# ---------------------------------------------------------------- matmul ---
+def matmul(a, b, bias=None, *, activation="none", out_dtype=None):
+    int_inputs = jnp.issubdtype(a.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if int_inputs else jnp.float32
+    if out_dtype is None:
+        out_dtype = jnp.int32 if int_inputs else a.dtype
+    out = jnp.dot(a, b, preferred_element_type=acc_dtype)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return _ACTIVATIONS[activation](out).astype(out_dtype)
+
+
+# ---------------------------------------------------------------- conv1d ---
+def conv1d(x, w, bias=None, *, stride=1, activation="none", out_dtype=None):
+    """x: (B, T, Cin), w: (K, Cin, Cout) 'valid' conv; returns (B, T_out, Cout)."""
+    if out_dtype is None:
+        out_dtype = x.dtype
+    ksize = w.shape[0]
+    t_out = (x.shape[1] - ksize) // stride + 1
+    acc = jnp.zeros((x.shape[0], t_out, w.shape[2]), jnp.float32)
+    for k in range(ksize):
+        xk = jax.lax.slice_in_dim(x, k, k + (t_out - 1) * stride + 1, axis=1)
+        xk = xk[:, ::stride]
+        acc = acc + jnp.einsum(
+            "btc,cd->btd", xk, w[k], preferred_element_type=jnp.float32
+        )
+    if bias is not None:
+        acc = acc + bias.astype(acc.dtype)
+    return _ACTIVATIONS[activation](acc).astype(out_dtype)
+
+
+# --------------------------------------------------------- edit distance ---
+def edit_distance(query, target, q_len=None, t_len=None):
+    """Batched Levenshtein distance via row-scan DP.
+
+    query: (P, m) int tokens, target: (P, n).  Optional per-pair lengths
+    (q_len, t_len) allow padded batches; padding tokens beyond the lengths are
+    ignored.  Returns (P,) int32 distances.
+    """
+    p, m = query.shape
+    _, n = target.shape
+    q_len = jnp.full((p,), m, jnp.int32) if q_len is None else q_len
+    t_len = jnp.full((p,), n, jnp.int32) if t_len is None else t_len
+
+    # DP over target positions; row = distances for all query prefixes.
+    row0 = jnp.broadcast_to(jnp.arange(m + 1, dtype=jnp.int32), (p, m + 1))
+
+    def step(row, j):
+        tj = jnp.take_along_axis(target, j[None].repeat(p)[:, None], axis=1)
+        sub_cost = (query != tj).astype(jnp.int32)  # (p, m)
+        active = (j < t_len)[:, None]
+
+        def cell(carry, i):
+            # carry: (left, diag_row) where left = new_row[i-1]
+            left, prev_row = carry
+            up = jax.lax.dynamic_index_in_dim(prev_row, i + 1, 1, keepdims=False)
+            diag = jax.lax.dynamic_index_in_dim(prev_row, i, 1, keepdims=False)
+            cost = jax.lax.dynamic_index_in_dim(sub_cost, i, 1, keepdims=False)
+            q_pad = i >= q_len  # beyond query end: copy left edge behaviour
+            new = jnp.minimum(jnp.minimum(left + 1, up + 1), diag + cost)
+            new = jnp.where(q_pad, left, new)
+            return (new, prev_row), new
+
+        first = row[:, 0] + 1  # D[0, j] = j
+        (_, _), rest = jax.lax.scan(
+            lambda c, i: cell(c, i), (first, row), jnp.arange(m)
+        )
+        new_row = jnp.concatenate([first[:, None], rest.T], axis=1)
+        new_row = jnp.where(active, new_row, row)
+        return new_row, None
+
+    row, _ = jax.lax.scan(step, row0, jnp.arange(n))
+    return jnp.take_along_axis(row, q_len[:, None], axis=1)[:, 0]
+
+
+def edit_distance_np(q: np.ndarray, t: np.ndarray) -> int:
+    """Single-pair classic O(mn) numpy DP — oracle for the oracle."""
+    m, n = len(q), len(t)
+    row = np.arange(m + 1, dtype=np.int64)
+    for j in range(1, n + 1):
+        prev = row.copy()
+        row[0] = j
+        for i in range(1, m + 1):
+            row[i] = min(row[i - 1] + 1, prev[i] + 1,
+                         prev[i - 1] + (q[i - 1] != t[j - 1]))
+    return int(row[m])
+
+
+def banded_align(query, target, *, band: int, match: int = 2,
+                 mismatch: int = -4, gap: int = -2, local: bool = False):
+    """Batched banded alignment score (linear gap).
+
+    global (Needleman-Wunsch) when ``local=False``; Smith-Waterman best local
+    score when ``local=True``.  Cells outside |i-j|<=band are -inf.
+    query: (P, m), target: (P, n) -> (P,) int32 scores.
+    """
+    p, m = query.shape
+    _, n = target.shape
+    neg = jnp.int32(-(2**20))
+    # full DP with band mask (oracle favours clarity over speed)
+    d0 = jnp.where(jnp.arange(m + 1) * jnp.abs(gap) <= band * jnp.abs(gap),
+                   jnp.arange(m + 1, dtype=jnp.int32) * gap, neg)
+    if local:
+        d0 = jnp.zeros((m + 1,), jnp.int32)
+    row0 = jnp.broadcast_to(d0, (p, m + 1)).astype(jnp.int32)
+    best0 = jnp.zeros((p,), jnp.int32) if local else None
+
+    def step(carry, j):
+        row, best = carry
+        tj = target[:, j][:, None]
+        sub = jnp.where(query == tj, match, mismatch).astype(jnp.int32)  # (p, m)
+        i_idx = jnp.arange(1, m + 1)
+        in_band = jnp.abs(i_idx - (j + 1)) <= band
+
+        def cell(left, i):
+            up = row[:, i + 1]
+            diag = row[:, i]
+            new = jnp.maximum(jnp.maximum(left + gap, up + gap), diag + sub[:, i])
+            if local:
+                new = jnp.maximum(new, 0)
+            new = jnp.where(in_band[i], new, neg if not local else 0)
+            return new, new
+
+        first = jnp.where((j + 1) <= band,
+                          (jnp.int32(0) if local else jnp.int32(gap * (j + 1))),
+                          (jnp.int32(0) if local else neg))
+        first = jnp.broadcast_to(first, (p,))
+        _, rest = jax.lax.scan(cell, first, jnp.arange(m))
+        new_row = jnp.concatenate([first[:, None], rest.T], axis=1)
+        if local:
+            best = jnp.maximum(best, new_row.max(axis=1))
+        return (new_row, best), None
+
+    (row, best), _ = jax.lax.scan(step, (row0, best0), jnp.arange(n))
+    return best if local else row[:, m]
+
+
+# -------------------------------------------------------- flash attention ---
+def attention(q, k, v, *, causal=True, scale=None, logit_dtype=jnp.float32):
+    """q: (B, Hq, Sq, D), k/v: (B, Hkv, Skv, D) with Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk,
+                        preferred_element_type=logit_dtype) * scale
+    if causal:
+        # last-token aligned: query i attends to keys <= i + (Skv - Sq)
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(skv)[None, :]
+        mask = kj <= qi + (skv - sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vv).astype(q.dtype)
+
+
+# --------------------------------------------------------------- ssd scan ---
+def ssd_scan(x, log_a, b, c, *, state0=None):
+    """Mamba-2 SSD reference: literal recurrent scan.
+
+    x: (BH, T, dh), log_a: (BH, T), b/c: (BH, T, ds)
+    S_t = exp(log_a_t) * S_{t-1} + b_t^T x_t ;  y_t = c_t @ S_t
+    Returns y: (BH, T, dh), final state (BH, ds, dh).
+    """
+    bh, t, dh = x.shape
+    ds = b.shape[-1]
+    s0 = jnp.zeros((bh, ds, dh), jnp.float32) if state0 is None else state0
+
+    def step(s, inp):
+        xt, at, bt, ct = inp
+        s = jnp.exp(at)[:, None, None] * s + jnp.einsum(
+            "ps,pd->psd", bt.astype(jnp.float32), xt.astype(jnp.float32))
+        y = jnp.einsum("ps,psd->pd", ct.astype(jnp.float32), s)
+        return s, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(log_a, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s_final

@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init); 512 host devices back both the 16x16 single-pod mesh
+and the 2x16x16 multi-pod mesh.
+
+Per cell this driver records, into a JSON report consumed by
+analysis/report.py -> EXPERIMENTS.md:
+  * lower + compile wall times,
+  * compiled.memory_analysis()  (per-device bytes: proves it fits 16 GB),
+  * compiled.cost_analysis()    (per-device FLOPs / bytes accessed),
+  * collective schedule + ring-model wire bytes (analysis/hlo.py),
+  * the three roofline terms and the dominant one.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out dryrun_report.json
+"""
+import argparse  # noqa: E402
+import gc  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis import roofline as roofline_mod  # noqa: E402
+from repro.configs import ARCHS, SHAPES, applicable  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, keep_hlo: bool = False, opt: bool = False) -> dict:
+    spec = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    cfg = spec.config()
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "opt": opt,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "family": cfg.family,
+        "params": cfg.param_count_estimate(),
+        "active_params": roofline_mod.model_params(cfg, active=True),
+    }
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.size
+        t0 = time.time()
+        cell = steps_mod.build_cell(arch, spec, shape, mesh, opt=opt)
+        lowered = steps_mod.lower_cell(cell, mesh)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes": int(ma.argument_size_in_bytes
+                              + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              - ma.alias_size_in_bytes),
+        }
+        hlo_text = compiled.as_text()
+        rl = roofline_mod.analyze(
+            compiled, cfg, shape.kind, shape.seq_len, shape.global_batch,
+            n_dev, hlo_text=hlo_text,
+            grad_accum=spec.accum_for(shape.name), fsdp=spec.fsdp,
+            opt_state_bytes=2 if spec.optimizer_state_dtype == "bfloat16"
+            else 4)
+        rec["roofline"] = rl.as_dict()
+        rec["status"] = "ok"
+        if keep_hlo:
+            rec["hlo_len"] = len(hlo_text)
+        del compiled, lowered, cell, hlo_text
+        gc.collect()
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec["status"] = "failed"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape cell (default: all)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="optimized rule set (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--out", default=None, help="JSON report path (append)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                key = (arch, shape_name, "2x16x16" if multi else "16x16")
+                if key in done:
+                    continue
+                rec = run_cell(arch, shape_name, multi, opt=args.opt)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    peak = rec["memory"]["peak_bytes"] / 2**30
+                    dom = rec["roofline"]["dominant"]
+                    extra = (f"peak={peak:.2f}GiB dom={dom} "
+                             f"lower={rec['lower_s']}s "
+                             f"compile={rec['compile_s']}s")
+                elif status == "failed":
+                    extra = rec["error"][:160]
+                print(f"[{status:7s}] {arch:28s} {shape_name:12s} "
+                      f"{key[2]:8s} {extra}", flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "failed" for r in results)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped(N/A), {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""Cell construction for the dry-run and real launchers.
+
+A *cell* = (architecture x input shape x mesh).  ``build_cell`` returns the
+function to jit plus ShapeDtypeStruct arguments and in/out shardings — no
+device allocation anywhere (the ShapeDtypeStruct pattern from the spec).
+
+  train_4k    -> trainer.make_train_step over (state, batch), donated state
+  prefill_32k -> backbone forward, last-token logits (whisper: encoder)
+  decode_32k  -> serve_step over (params, cache, tokens, pos), donated cache
+  long_500k   -> serve_step with a 524288-token cache (ssm/hybrid only)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.common import ArchSpec
+from repro.configs.shapes import ShapeCell
+from repro.distributed import sharding as shardlib
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model
+from repro.train import optimizer as opt_mod
+from repro.train import trainer as trainer_mod
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple[int, ...]
+    meta: dict
+    mesh: Any = None
+    rules: Any = None           # sharding context re-entered at trace time
+
+
+def make_rules(spec: ArchSpec, mesh, shape: ShapeCell,
+               cfg: Optional[ModelConfig] = None, *,
+               opt: bool = False) -> dict:
+    overrides = dict(spec.rules_overrides)
+    if shape.kind == "decode" and shape.global_batch < mesh.shape.get(
+            "data", 1):
+        # batch unshardable (e.g. long_500k B=1): shard the KV sequence over
+        # every axis instead; XLA distributes the attention reduction.
+        overrides.setdefault("kv_seq", shardlib.data_axes(mesh) + ("model",))
+    if cfg is not None and cfg.num_heads % mesh.shape.get("model", 1) != 0:
+        # heads don't divide the model axis (llama4 40H, minicpm 36H,
+        # starcoder2 24H): context-parallel attention instead of replicated
+        # (B, H, S, S) logits
+        overrides.setdefault("act_seq", "model")
+    if opt:
+        # §Perf hillclimb (see EXPERIMENTS.md): sequence-parallel decode
+        # attention; data-sharded MoE capacity when experts can't shard
+        if shape.kind == "decode":
+            overrides.setdefault("kv_seq", "model")
+        mext = mesh.shape.get("model", 1)
+        if cfg is not None and cfg.num_heads % mext == 0 \
+                and cfg.num_heads // max(cfg.num_kv_heads, 1) >= 1:
+            overrides.setdefault("act_heads_q", "model")
+    return shardlib.default_rules(mesh, fsdp=spec.fsdp, overrides=overrides)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        dec = max(s // cfg.decoder_train_frac, 1)
+        return {
+            "frames": _sds((b, s, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((b, dec), jnp.int32),
+            "labels": _sds((b, dec), jnp.int32),
+        }
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["input_embeds"] = _sds((b, cfg.frontend_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def _tree_shardings(mesh, axes_tree, shape_tree):
+    specs = shardlib.spec_tree(axes_tree, shape_tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _batch_sharding(mesh, tree):
+    """Per-leaf batch sharding with divisibility fallback (B=1 cells)."""
+
+    def one(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, shardlib.logical_spec(axes, leaf.shape))
+
+    return jax.tree.map(one, tree)
+
+
+def build_cell(arch_name: str, spec: ArchSpec, shape: ShapeCell, mesh,
+               *, smoke: bool = False, opt: bool = False) -> Cell:
+    cfg = spec.smoke_config() if smoke else spec.config()
+    model = get_model(cfg)
+    rules = make_rules(spec, mesh, shape, cfg, opt=opt)
+    with shardlib.use_sharding(mesh, rules):
+        if shape.kind == "train":
+            cell = _train_cell(arch_name, spec, cfg, model, shape, mesh)
+        elif shape.kind == "prefill":
+            cell = _prefill_cell(arch_name, cfg, model, shape, mesh)
+        else:
+            cell = _decode_cell(arch_name, cfg, model, shape, mesh)
+    cell.mesh = mesh
+    cell.rules = rules
+    return cell
+
+
+def _train_cell(arch_name, spec: ArchSpec, cfg, model, shape, mesh) -> Cell:
+    params_shapes, axes = model.abstract_params(cfg)
+    opt_cfg = opt_mod.OptimizerConfig(
+        state_dtype=spec.optimizer_state_dtype,
+        schedule="wsd" if "minicpm" in arch_name else "cosine")
+    tcfg = trainer_mod.TrainerConfig(
+        grad_accum=spec.accum_for(shape.name),
+        accum_dtype=spec.grad_accum_dtype)
+    step = trainer_mod.make_train_step(model.loss, cfg, opt_cfg, tcfg)
+
+    state_shapes = {
+        "params": params_shapes,
+        "opt": jax.eval_shape(
+            functools.partial(opt_mod.init_opt_state, cfg=opt_cfg),
+            params_shapes),
+    }
+    saxes = trainer_mod._pad_axes(trainer_mod.state_axes(axes), state_shapes)
+    state_sh = _tree_shardings(mesh, saxes, state_shapes)
+    batch_shapes = _batch_specs(cfg, shape)
+    batch_sh = _batch_sharding(mesh, batch_shapes)
+    return Cell(
+        name=f"{arch_name}:{shape.name}",
+        fn=step,
+        args=(state_shapes, batch_shapes),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate=(0,),
+        meta={"cfg": cfg, "kind": "train", "grad_accum": tcfg.grad_accum},
+    )
+
+
+def _prefill_cell(arch_name, cfg, model, shape, mesh) -> Cell:
+    params_shapes, axes = model.abstract_params(cfg)
+    p_sh = _tree_shardings(mesh, axes, params_shapes)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        def fn(params, frames):
+            return encdec.encode(params, frames, cfg)
+
+        args = (params_shapes, _sds((b, s, cfg.d_model), jnp.bfloat16))
+    elif cfg.family == "vlm":
+        def fn(params, tokens, input_embeds):
+            logits, _ = transformer.apply(params, tokens, cfg,
+                                          input_embeds=input_embeds,
+                                          last_logits_only=True)
+            return logits
+
+        args = (params_shapes, _sds((b, s), jnp.int32),
+                _sds((b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16))
+    else:
+        def fn(params, tokens):
+            logits, _ = transformer.apply(params, tokens, cfg,
+                                          last_logits_only=True)
+            return logits
+
+        args = (params_shapes, _sds((b, s), jnp.int32))
+    in_sh = (p_sh,) + tuple(_batch_sharding(mesh, a) for a in args[1:])
+    out_sh_probe = jax.eval_shape(fn, *args)
+    return Cell(
+        name=f"{arch_name}:{shape.name}",
+        fn=fn, args=args, in_shardings=in_sh,
+        out_shardings=_batch_sharding(mesh, out_sh_probe), donate=(),
+        meta={"cfg": cfg, "kind": "prefill"},
+    )
+
+
+def _decode_cell(arch_name, cfg, model, shape, mesh) -> Cell:
+    params_shapes, axes = model.abstract_params(cfg)
+    p_sh = _tree_shardings(mesh, axes, params_shapes)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        cache_shapes = jax.eval_shape(
+            functools.partial(encdec.init_cache, cfg, b, s, enc_len=1500))
+    else:
+        cache_shapes = jax.eval_shape(
+            functools.partial(transformer.init_cache, cfg, b, s))
+    named = model.cache_axes(cfg)
+    cache_axes_tree = {k: named[k] for k in cache_shapes}
+    cache_sh = _tree_shardings(mesh, cache_axes_tree, cache_shapes)
+
+    def fn(params, cache, tokens, pos):
+        return model.serve(params, cache, tokens, pos, cfg)
+
+    tok_s, pos_s = _sds((b, 1), jnp.int32), _sds((b,), jnp.int32)
+    args = (params_shapes, cache_shapes, tok_s, pos_s)
+    logits_probe = jax.eval_shape(
+        lambda p, c, t, ps: model.serve(p, c, t, ps, cfg)[0],
+        *args)
+    return Cell(
+        name=f"{arch_name}:{shape.name}",
+        fn=fn, args=args,
+        in_shardings=(p_sh, cache_sh, _batch_sharding(mesh, tok_s),
+                      _batch_sharding(mesh, pos_s)),
+        out_shardings=(_batch_sharding(mesh, logits_probe), cache_sh),
+        donate=(1,),
+        meta={"cfg": cfg, "kind": "decode"},
+    )
+
+
+def lower_cell(cell: Cell, mesh=None):
+    mesh = mesh if mesh is not None else cell.mesh
+    inner = cell.fn
+
+    def traced(*a):
+        # activation sharding constraints (shardlib.shard) fire at trace
+        # time — the logical-rules context must be live inside the jit
+        with shardlib.use_sharding(mesh, cell.rules):
+            return inner(*a)
+
+    jitted = jax.jit(
+        traced,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate,
+    )
+    return jitted.lower(*cell.args)

@@ -1,0 +1,112 @@
+"""Training launcher: distributed LM pretraining with full fault tolerance.
+
+On real hardware this is the per-host entry (jax.distributed.initialize +
+the production mesh); in this container it runs the same code path on the
+local device set.  Demonstrates: sharded train step, deterministic data,
+async checkpointing, failure injection + recovery, straggler monitoring,
+gradient compression across pods.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --steps 20 --mesh 1x1 --ckpt-dir /tmp/lm_ckpt --fail-at 7
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.data import tokens as tokens_mod
+from repro.distributed import sharding as shardlib
+from repro.launch.mesh import make_mesh
+from repro.models.registry import get_model
+from repro.train import checkpoint as ckpt_mod
+from repro.train import fault_tolerance as ft
+from repro.train import optimizer as opt_mod
+from repro.train import trainer as trainer_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM data x model, e.g. 2x4 (device count permitting)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject simulated node failures at these steps")
+    args = ap.parse_args()
+
+    spec = ARCHS[args.arch]
+    cfg = spec.smoke_config() if args.smoke else spec.config()
+    model = get_model(cfg)
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((d, m), ("data", "model"))
+    rules = shardlib.default_rules(mesh, fsdp=spec.fsdp,
+                                   overrides=spec.rules_overrides)
+
+    opt_cfg = opt_mod.OptimizerConfig(
+        lr=args.lr, total_steps=args.steps,
+        schedule="wsd" if "minicpm" in args.arch else "cosine",
+        state_dtype=spec.optimizer_state_dtype)
+    tcfg = trainer_mod.TrainerConfig(grad_accum=args.grad_accum,
+                                     accum_dtype=spec.grad_accum_dtype)
+
+    with shardlib.use_sharding(mesh, rules):
+        params, axes = model.init(jax.random.key(0), cfg)
+        state = {"params": params,
+                 "opt": opt_mod.init_opt_state(params, opt_cfg)}
+        step_fn = trainer_mod.make_train_step(model.loss, cfg, opt_cfg, tcfg)
+
+        def traced(state, batch):
+            with shardlib.use_sharding(mesh, rules):
+                return step_fn(state, batch)
+
+        jitted = jax.jit(traced, donate_argnums=(0,))
+
+    pipe_cfg = tokens_mod.TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch)
+
+    def batch_fn(step):
+        b = tokens_mod.batch_at_step(pipe_cfg, step)
+        if cfg.family == "vlm":
+            b["input_embeds"] = jnp.zeros(
+                (args.global_batch, cfg.frontend_tokens, cfg.d_model),
+                jnp.bfloat16)
+        if cfg.family == "encdec":
+            b = {"frames": jnp.zeros((args.global_batch, args.seq_len,
+                                      cfg.d_model), jnp.bfloat16),
+                 "tokens": b["tokens"][:, : args.seq_len // 8],
+                 "labels": b["labels"][:, : args.seq_len // 8]}
+        return b
+
+    injector = ft.FailureInjector(fail_at_steps=tuple(args.fail_at))
+    monitor = ft.StragglerMonitor()
+    t0 = time.time()
+    state, history, restarts = ft.run_resilient(
+        jitted, state, batch_fn, n_steps=args.steps,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        injector=injector if args.fail_at else None, monitor=monitor)
+    ckpt_mod.wait_pending()
+    wall = time.time() - t0
+    losses = [history[s] for s in sorted(history)]
+    print(f"\n{args.arch}: {args.steps} steps in {wall:.1f}s "
+          f"({wall / max(args.steps, 1):.2f}s/step), "
+          f"restarts={restarts}, stragglers={monitor.flagged}")
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f}")
+    assert np.isfinite(losses).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Assigned-architecture model zoo (pure JAX, scan-over-layers, shardable).
+
+  config.py      ModelConfig covering dense/MoE/SSM/hybrid/enc-dec/VLM
+  param.py       ParamBuilder: params + logical-axis trees in one pass
+  layers.py      RMSNorm, RoPE, MLP, embeddings
+  attention.py   GQA attention: full / chunked(online-softmax) / KV-cache decode
+  moe.py         GShard-style top-k dispatch (+ dense fallback for smokes)
+  mamba2.py      Mamba-2 SSD block (chunked scan + O(1) decode)
+  transformer.py decoder-only LM over block patterns (covers vlm too)
+  encdec.py      whisper-style encoder-decoder
+  registry.py    uniform Model API: init / loss / serve, per family
+"""

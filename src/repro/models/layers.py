@@ -1,0 +1,95 @@
+"""Shared neural layers for the architecture zoo (pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.param import ScopedBuilder
+
+_ACT = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "squared_relu": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+# ------------------------------------------------------------------ norm ---
+def init_rmsnorm(b: ScopedBuilder, dim: int):
+    b.param("scale", (dim,), ("embed",), init="ones", dtype=jnp.float32)
+
+
+def rmsnorm(p, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def head_rmsnorm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    """qk-norm: normalize the trailing head_dim (qwen3)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ---
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) rotary over D; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- mlp ---
+def init_mlp(b: ScopedBuilder, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_gated:
+        b.param("wi_gate", (d, ff), ("embed", "mlp"))
+        b.param("wi", (d, ff), ("embed", "mlp"))
+    else:
+        b.param("wi", (d, ff), ("embed", "mlp"))
+    b.param("wo", (ff, d), ("mlp", "embed"))
+
+
+def mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _ACT[cfg.activation]
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.mlp_gated:
+        h = act(jnp.einsum("bsd,df->bsf", x, p["wi_gate"])) * h
+    else:
+        h = act(h)
+    h = shard(h, "batch", None, "act_mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ------------------------------------------------------------- embedding ---
+def init_embedding(b: ScopedBuilder, cfg: ModelConfig):
+    b.param("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+            scale=1.0)
+    if not cfg.tie_embeddings:
+        b.param("unembed", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+
+
+def embed(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = p["embed"][tokens]
+    return shard(x, "batch", None, "act_embed")
+
+
+def unembed(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard(logits, "batch", None, "vocab")

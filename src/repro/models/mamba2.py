@@ -1,0 +1,191 @@
+"""Mamba-2 (SSD) block: chunked-matmul scan for train/prefill, O(1) decode.
+
+State-space duality is the same co-design move as the paper's CNN-for-MAT
+basecaller: reshape a recurrence until a matrix engine can eat it.  The
+chunked algorithm here mirrors kernels/ssd_scan.py 1:1 (tested equal); on
+TPU the Pallas kernel is the execution target, the jnp path is what the
+dry-run lowers (same FLOP structure, XLA ops).
+
+Block layout (following the Mamba-2 paper, single B/C group):
+  in_proj: d -> [z (d_in), x (d_in), B (ds), C (ds), dt (heads)]
+  depthwise causal conv (width 4) over [x B C]
+  per-head scalar decay: log_a = -exp(A_log) * dt,  dt = softplus(dt + bias)
+  y = SSD(x * dt, log_a, B, C) + D * x ;  out = out_proj(rmsnorm(y) * silu(z))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.param import ScopedBuilder
+
+
+def init_mamba(b: ScopedBuilder, cfg: ModelConfig):
+    d = cfg.d_model
+    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ds
+    b.param("in_proj", (d, 2 * di + 2 * ds + nh), ("embed", "ssm_inner"))
+    b.param("conv_w", (cfg.ssm_conv_width, conv_dim), (None, "ssm_inner"))
+    b.param("conv_b", (conv_dim,), ("ssm_inner",), init="zeros")
+    b.param("A_log", (nh,), (None,), init="zeros", dtype=jnp.float32)
+    b.param("dt_bias", (nh,), (None,), init="zeros", dtype=jnp.float32)
+    b.param("D", (nh,), (None,), init="ones", dtype=jnp.float32)
+    b.param("norm_scale", (di,), ("ssm_inner",), init="ones",
+            dtype=jnp.float32)
+    b.param("out_proj", (di, d), ("ssm_inner", "embed"))
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * ds]
+    dt = proj[..., -nh:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv over (B, S, C) with (K, C) weights."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + bias)
+
+
+def ssd_chunked(x, log_a, b, c, chunk: int, state0=None):
+    """Chunked SSD, jnp mirror of the Pallas kernel.
+
+    x: (BH, T, dh), log_a: (BH, T), b/c: (BH, T, ds).
+    Returns (y, final_state (BH, ds, dh)).
+    """
+    bh, t, dh = x.shape
+    ds = b.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    n = t // chunk
+    xs = x.reshape(bh, n, chunk, dh)
+    las = log_a.reshape(bh, n, chunk).astype(jnp.float32)
+    bs = b.reshape(bh, n, chunk, ds)
+    cs = c.reshape(bh, n, chunk, ds)
+    rows = jnp.arange(chunk)
+    causal = rows[:, None] >= rows[None, :]
+
+    def step(s, inp):
+        xc, lac, bc_, cc = inp
+        cum = jnp.cumsum(lac, axis=-1)                        # (BH, Lc)
+        decay = jnp.where(causal,
+                          jnp.exp(cum[:, :, None] - cum[:, None, :]), 0.0)
+        cb = jnp.einsum("pts,pls->ptl", cc.astype(jnp.float32),
+                        bc_.astype(jnp.float32))
+        y = jnp.einsum("ptl,pld->ptd", cb * decay, xc.astype(jnp.float32))
+        y += jnp.einsum("pts,psd->ptd",
+                        cc.astype(jnp.float32) * jnp.exp(cum)[..., None], s)
+        total = cum[:, -1]
+        w = jnp.exp(total[:, None] - cum)                     # (BH, Lc)
+        s_new = (jnp.exp(total)[:, None, None] * s
+                 + jnp.einsum("pls,pld->psd",
+                              bc_.astype(jnp.float32) * w[..., None],
+                              xc.astype(jnp.float32)))
+        return s_new, y.astype(x.dtype)
+
+    s0 = (jnp.zeros((bh, ds, dh), jnp.float32) if state0 is None else state0)
+    xs_t = (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(las, 1, 0),
+            jnp.moveaxis(bs, 1, 0), jnp.moveaxis(cs, 1, 0))
+    s_final, ys = jax.lax.scan(step, s0, xs_t)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bh, t, dh)
+    return y, s_final
+
+
+def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
+    """Train/prefill path.  x: (B, S, d) -> (y, (conv_state, ssm_state))."""
+    bsz, s, _ = x.shape
+    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    dh = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    proj = shard(proj, "batch", None, "act_mlp")
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :di]
+    b_in = xbc[..., di: di + ds]
+    c_in = xbc[..., di + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    log_a = -jnp.exp(p["A_log"]) * dt                            # (B,S,nh)
+
+    xh = xin.reshape(bsz, s, nh, dh)
+    xh = xh * dt.astype(xh.dtype)[..., None]
+    # heads share B/C (single group): broadcast over heads
+    bh_flat = bsz * nh
+    xf = xh.transpose(0, 2, 1, 3).reshape(bh_flat, s, dh)
+    la = log_a.transpose(0, 2, 1).reshape(bh_flat, s)
+    bf = jnp.broadcast_to(b_in[:, None], (bsz, nh, s, ds)).reshape(
+        bh_flat, s, ds)
+    cf = jnp.broadcast_to(c_in[:, None], (bsz, nh, s, ds)).reshape(
+        bh_flat, s, ds)
+    y, s_final = ssd_chunked(xf, la, bf, cf, cfg.ssm_chunk, state0=ssm_state)
+    y = y.reshape(bsz, nh, s, dh).transpose(0, 2, 1, 3)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    # gated RMSNorm then out-projection
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]).astype(
+        x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    new_conv_state = xbc_tail = None  # train path drops states
+    return out, (new_conv_state, s_final)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, n_layers: int,
+                     dtype=jnp.bfloat16):
+    di, ds = cfg.ssm_d_inner, cfg.ssm_state
+    conv_dim = di + 2 * ds
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, conv_dim),
+                          dtype),
+        "ssm": jnp.zeros((n_layers, batch * cfg.ssm_heads, ds,
+                          cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cfg: ModelConfig, conv_state, ssm_state):
+    """One-token decode.  x: (B, 1, d); conv_state: (B, K-1, conv_dim);
+    ssm_state: (B*nh, ds, dh).  Returns (y, new_conv, new_ssm)."""
+    bsz = x.shape[0]
+    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    dh = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z, xbc_new, dt = _split_proj(cfg, proj)
+    window = jnp.concatenate([conv_state.astype(x.dtype), xbc_new], axis=1)
+    conv = sum(window[:, i] * p["conv_w"][i]
+               for i in range(cfg.ssm_conv_width))
+    xbc = jax.nn.silu(conv + p["conv_b"])[:, None]             # (B,1,conv)
+    new_conv_state = window[:, 1:]
+    xin = xbc[..., :di]
+    b_in = xbc[..., di: di + ds]
+    c_in = xbc[..., di + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                      # (B,1,nh)
+
+    xh = (xin.reshape(bsz, nh, dh) * dt[:, 0, :, None]).reshape(
+        bsz * nh, dh)
+    bf = jnp.broadcast_to(b_in[:, 0][:, None], (bsz, nh, ds)).reshape(
+        bsz * nh, ds)
+    cf = jnp.broadcast_to(c_in[:, 0][:, None], (bsz, nh, ds)).reshape(
+        bsz * nh, ds)
+    af = a[:, 0].reshape(bsz * nh)
+    new_ssm = (af[:, None, None] * ssm_state
+               + jnp.einsum("ps,pd->psd", bf.astype(jnp.float32),
+                            xh.astype(jnp.float32)))
+    y = jnp.einsum("ps,psd->pd", cf.astype(jnp.float32), new_ssm)
+    y = y.reshape(bsz, nh, dh) + (xh.reshape(bsz, nh, dh)
+                                  * p["D"][None, :, None])
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]).astype(
+        x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, new_conv_state, new_ssm

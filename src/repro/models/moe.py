@@ -1,0 +1,155 @@
+"""Mixture-of-Experts with GShard-style capacity dispatch.
+
+Two implementations behind one init:
+
+  * ``dispatch`` — top-k routing with a (tokens, experts, capacity) one-hot
+    dispatch tensor and einsum send/receive; under an expert-parallel
+    sharding rule ("expert" -> data axis) XLA turns the two dispatch einsums
+    into all-to-alls, exactly the GShard schedule.  Capacity-dropped tokens
+    fall through on the residual path (standard).
+  * ``dense`` — every expert on every token, gate-weighted (exact, no drops);
+    only viable for smoke-scale configs and used as the routing oracle in
+    tests.
+
+Router: softmax over expert logits in f32, top-k, gates renormalized over
+the selected experts (llama4 top-1 degenerates to a straight softmax gate).
+An auxiliary load-balance loss (Switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import _ACT
+from repro.models.param import ScopedBuilder
+
+
+def init_moe(b: ScopedBuilder, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    b.param("router", (d, e), ("embed", None), scale=0.02, dtype=jnp.float32)
+    if cfg.mlp_gated:
+        b.param("wi_gate", (e, d, ff), ("expert", "embed", "mlp"))
+        b.param("wi", (e, d, ff), ("expert", "embed", "mlp"))
+    else:
+        b.param("wi", (e, d, ff), ("expert", "embed", "mlp"))
+    b.param("wo", (e, ff, d), ("expert", "mlp", "embed"))
+    if cfg.moe_shared_expert:
+        b.param("shared_wi_gate", (d, ff), ("embed", "mlp"))
+        b.param("shared_wi", (d, ff), ("embed", "mlp"))
+        b.param("shared_wo", (ff, d), ("mlp", "embed"))
+
+
+def _expert_ffn(p, x_ecd, cfg: ModelConfig):
+    act = _ACT[cfg.activation]
+    h = jnp.einsum("ecd,edf->ecf", x_ecd, p["wi"])
+    if cfg.mlp_gated:
+        h = act(jnp.einsum("ecd,edf->ecf", x_ecd, p["wi_gate"])) * h
+    else:
+        h = act(h)
+    h = shard(h, "expert", "moe_cap", "act_mlp")
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def _router(p, x_flat, cfg: ModelConfig):
+    """x_flat: (T, d) -> (gates (T, k), idx (T, k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = cfg.experts_per_token
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux: E * sum_e f_e * p_e
+    e = cfg.num_experts
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (x_flat.shape[0] * k))
+    aux = e * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def moe_dispatch(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_loss) via capacity-bounded top-k dispatch.
+
+    Scatter/gather dispatch, NOT the GShard one-hot einsum: the (T, E, C)
+    dispatch matmul costs 2*T*E*C*d ~ 2*1.25*k*T^2*d FLOPs — quadratic in
+    tokens, and at train_4k scale it exceeds the expert FFN FLOPs by an
+    order of magnitude (measured in the dry-run; see EXPERIMENTS.md §Perf).
+    Scatter-add send / gather combine moves the same bytes with zero
+    matmul FLOPs; capacity overflow drops fall out of scatter's drop mode.
+    """
+    bsz, s, d = x.shape
+    t = bsz * s
+    xf = x.reshape(t, d)
+    gates, idx, aux = _router(p, xf, cfg)
+    e, k = cfg.num_experts, cfg.experts_per_token
+    gates = gates.reshape(bsz, s, k)
+    idx_r = idx.reshape(bsz, s * k)
+
+    # GROUPED dispatch (GShard's G dim = batch rows): every (row, choice)
+    # gets a slot inside its OWN row's capacity slice, so with the capacity
+    # dim sharded like the batch the scatter/gather never crosses data
+    # shards — a global-cumsum slot assignment costs a (E, C, d) cross-shard
+    # reduction per layer instead (measured 15 GiB/layer/ubatch on grok;
+    # see EXPERIMENTS.md §Perf iteration 2).
+    cap_row = max(int(s * k * cfg.moe_capacity_factor / e), 1)
+    onehot = jax.nn.one_hot(idx_r, e, dtype=jnp.int32)       # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    slot = jnp.take_along_axis(pos, idx_r[..., None],
+                               axis=2)[..., 0]               # (B, S*k)
+    keep = (slot < cap_row).reshape(bsz, s, k)
+    gates = gates * keep
+    slot_c = jnp.where(slot < cap_row, slot, cap_row).reshape(bsz, s, k)
+    idx_bsk = idx.reshape(bsz, s, k)
+    rows = jnp.arange(bsz, dtype=jnp.int32)[:, None, None]
+    col = rows * cap_row + slot_c                            # (B, S, k)
+
+    # send: scatter token rows into (E, B*cap_row, d); OOB slots drop
+    x_e = jnp.zeros((e, bsz * cap_row, d), x.dtype)
+    x_e = x_e.at[idx_bsk, col].add(
+        jnp.broadcast_to(x[:, :, None], (bsz, s, k, d)),
+        mode="drop", unique_indices=False)
+    # "expert" takes the data axis under EP; otherwise "moe_cap" (the
+    # row-aligned capacity dim) takes it — either way the FFN is balanced
+    x_e = shard(x_e, "expert", "moe_cap", "act_embed")
+    y_e = _expert_ffn(p, x_e, cfg)
+    y_e = shard(y_e, "expert", "moe_cap", "act_embed")
+    # receive: gather each choice's result row and gate-combine
+    y_tk = y_e.at[idx_bsk, col].get(mode="fill", fill_value=0)  # (B,S,k,d)
+    y = jnp.einsum("bskd,bsk->bsd", y_tk, gates.astype(y_tk.dtype))
+    if cfg.moe_shared_expert:
+        y = y + _shared(p, x, cfg)
+    return y, aux
+
+
+def moe_dense(p, x, cfg: ModelConfig):
+    """Exact dense fallback: all experts, gate-weighted (smoke scale)."""
+    bsz, s, d = x.shape
+    xf = x.reshape(bsz * s, d)
+    gates, idx, aux = _router(p, xf, cfg)
+    act = _ACT[cfg.activation]
+    h = jnp.einsum("td,edf->tef", xf, p["wi"])
+    if cfg.mlp_gated:
+        h = act(jnp.einsum("td,edf->tef", xf, p["wi_gate"])) * h
+    else:
+        h = act(h)
+    y_all = jnp.einsum("tef,efd->ted", h, p["wo"])             # (T, E, d)
+    w = jnp.zeros((xf.shape[0], cfg.num_experts), x.dtype)
+    w = w.at[jnp.arange(xf.shape[0])[:, None], idx].add(gates.astype(x.dtype))
+    y = jnp.einsum("ted,te->td", y_all, w).reshape(bsz, s, d)
+    if cfg.moe_shared_expert:
+        y = y + _shared(p, x, cfg)
+    return y, aux
+
+
+def _shared(p, x, cfg: ModelConfig):
+    act = _ACT[cfg.activation]
+    h = act(jnp.einsum("bsd,df->bsf", x, p["shared_wi_gate"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["shared_wi"])
+    return jnp.einsum("bsf,fd->bsd", h, p["shared_wo"])
+
+
+def moe(p, x, cfg: ModelConfig):
+    if cfg.moe_impl == "dense":
+        return moe_dense(p, x, cfg)
+    return moe_dispatch(p, x, cfg)

@@ -1,0 +1,77 @@
+"""ParamBuilder: initialize parameters and record logical sharding axes.
+
+Every parameter is created through ``ParamBuilder.param(name, shape, axes)``,
+which simultaneously
+  * draws the initial value (normal / zeros / ones, fan-in scaled), and
+  * records a tuple of *logical axis names* (e.g. ("embed", "mlp")) in a
+    parallel tree.
+
+``distributed/sharding.py`` maps logical names -> mesh axes per architecture,
+giving t5x-style logical partitioning without a framework dependency.  Under
+``jax.eval_shape`` the same code yields ShapeDtypeStructs + axes with zero
+allocation — exactly what the dry-run needs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamBuilder:
+    def __init__(self, rng: jax.Array, dtype=jnp.bfloat16):
+        self._rng = rng
+        self.dtype = dtype
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def _split(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def scope(self, name: str) -> "ScopedBuilder":
+        return ScopedBuilder(self, [name])
+
+    def param(self, path: list[str], shape: tuple[int, ...],
+              axes: tuple[str | None, ...], *, init: str = "normal",
+              scale: float | None = None, dtype=None):
+        assert len(shape) == len(axes), (path, shape, axes)
+        dtype = dtype or self.dtype
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            val = (jax.random.normal(self._split(), shape, jnp.float32)
+                   * scale).astype(dtype)
+        elif init == "zeros":
+            val = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, dtype)
+        else:
+            raise ValueError(init)
+        node, anode = self.params, self.axes
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+            anode = anode.setdefault(k, {})
+        assert path[-1] not in node, f"duplicate param {path}"
+        node[path[-1]] = val
+        anode[path[-1]] = axes
+        return val
+
+
+class ScopedBuilder:
+    def __init__(self, root: ParamBuilder, prefix: list[str]):
+        self._root = root
+        self._prefix = prefix
+
+    def scope(self, name: str) -> "ScopedBuilder":
+        return ScopedBuilder(self._root, self._prefix + [name])
+
+    def param(self, name: str, shape, axes, **kw):
+        return self._root.param(self._prefix + [name], shape, axes, **kw)
+
+
+def stacked(axes: tuple[str | None, ...]) -> tuple[str | None, ...]:
+    """Prepend the layer-stack axis (replicated: scan dim)."""
+    return (None,) + tuple(axes)

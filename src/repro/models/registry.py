@@ -1,0 +1,66 @@
+"""Uniform Model API over all families, consumed by launch/, tests, benches.
+
+  model = get_model(cfg)
+  params, axes = model.init(rng, cfg)
+  loss, metrics = model.loss(params, batch, cfg)         # train path
+  cache = model.init_cache(cfg, batch_size, max_len, ...)
+  logits, cache = model.serve(params, cache, tokens, pos, cfg)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    init: Callable
+    abstract_params: Callable
+    loss: Callable
+    init_cache: Callable
+    serve: Callable
+    cache_axes: Callable
+
+
+def _decoder_model() -> Model:
+    return Model(
+        init=transformer.init,
+        abstract_params=lambda cfg: transformer.abstract_params(cfg),
+        loss=transformer.loss_fn,
+        init_cache=lambda cfg, batch, max_len, **kw:
+            transformer.init_cache(cfg, batch, max_len, **kw),
+        serve=transformer.serve_step,
+        cache_axes=transformer.cache_specs,
+    )
+
+
+def _encdec_model() -> Model:
+    def cache_axes(cfg):
+        return {
+            "k": (None, None, "batch", "kv_seq", "kv_heads"),
+            "v": (None, None, "batch", "kv_seq", "kv_heads"),
+            "xk": (None, "batch", None, "kv_heads"),
+            "xv": (None, "batch", None, "kv_heads"),
+        }
+
+    return Model(
+        init=encdec.init,
+        abstract_params=lambda cfg: transformer.abstract_params(
+            cfg, init_fn=encdec.init),
+        loss=encdec.loss_fn,
+        init_cache=lambda cfg, batch, max_len, enc_len=1500, **kw:
+            encdec.init_cache(cfg, batch, max_len, enc_len, **kw),
+        serve=encdec.serve_step,
+        cache_axes=cache_axes,
+    )
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _encdec_model()
+    return _decoder_model()

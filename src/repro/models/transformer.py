@@ -1,0 +1,264 @@
+"""Decoder-only LM over block patterns — covers dense, MoE, SSM, hybrid, VLM.
+
+The layer stack is ``num_blocks`` x ``block_pattern`` (see config.py).  All
+per-layer parameters carry a leading ``num_blocks`` dim and the stack is a
+single ``lax.scan`` (+ per-block ``jax.checkpoint``), which keeps the HLO of
+an 80-layer 400B-param graph compact enough to compile on one host and makes
+remat policy a one-line choice.
+
+Uniform API (used by configs/, launch/ and tests):
+  init(rng, cfg) -> (params, axes)        axes: logical names per param
+  apply(params, tokens, cfg, ...) -> logits
+  loss_fn(params, batch, cfg) -> (loss, metrics)
+  init_cache(cfg, batch, max_len) -> cache     (serve)
+  serve_step(params, cache, tokens, pos, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba2, moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.param import ParamBuilder, ScopedBuilder
+
+
+class _StackedBuilder:
+    """Wraps a ScopedBuilder: every param gains a leading num_blocks dim."""
+
+    def __init__(self, inner: ScopedBuilder, n: int):
+        self._inner = inner
+        self._n = n
+
+    def scope(self, name):
+        return _StackedBuilder(self._inner.scope(name), self._n)
+
+    def param(self, name, shape, axes, *, init="normal", scale=None,
+              dtype=None):
+        if init == "normal" and scale is None:
+            fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / (max(fan_in, 1) ** 0.5)
+        return self._inner.param(name, (self._n,) + tuple(shape),
+                                 (None,) + tuple(axes), init=init,
+                                 scale=scale, dtype=dtype)
+
+
+def _init_block_stack(b: ScopedBuilder, cfg: ModelConfig, n_blocks: int,
+                      *, cross_attention: bool = False):
+    sb = _StackedBuilder(b, n_blocks)
+    for li, spec in enumerate(cfg.block_pattern):
+        lb = sb.scope(f"l{li}")
+        L.init_rmsnorm(lb.scope("norm1"), cfg.d_model)
+        if spec.mixer == "attn":
+            attn.init_attention(lb.scope("attn"), cfg)
+        else:
+            mamba2.init_mamba(lb.scope("mamba"), cfg)
+        if cross_attention:
+            L.init_rmsnorm(lb.scope("norm_x"), cfg.d_model)
+            attn.init_attention(lb.scope("xattn"), cfg)
+        if spec.ff is not None:
+            L.init_rmsnorm(lb.scope("norm2"), cfg.d_model)
+            if spec.ff == "mlp":
+                L.init_mlp(lb.scope("mlp"), cfg)
+            else:
+                moe_mod.init_moe(lb.scope("moe"), cfg)
+
+
+def init(rng: jax.Array, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    pb = ParamBuilder(rng, dtype=dtype)
+    L.init_embedding(pb.scope("embedding"), cfg)
+    _init_block_stack(pb.scope("blocks"), cfg, cfg.num_blocks)
+    L.init_rmsnorm(pb.scope("final_norm"), cfg.d_model)
+    return pb.params, pb.axes
+
+
+def abstract_params(cfg: ModelConfig, init_fn=None):
+    """(ShapeDtypeStruct tree, axes tree) with zero allocation.
+
+    The axes tree is static python data, captured by side effect while
+    ``eval_shape`` traces the initializer without allocating anything.
+    """
+    init_fn = init_fn or init
+    captured = {}
+
+    def run(key):
+        params, axes = init_fn(key, cfg)
+        captured["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(run, jax.random.key(0))
+    return shapes, captured["axes"]
+
+
+# ------------------------------------------------------------- forward ---
+def _block_fn(block_params, x, cfg: ModelConfig, positions, aux):
+    for li, spec in enumerate(cfg.block_pattern):
+        lp = block_params[f"l{li}"]
+        h = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        if spec.mixer == "attn":
+            h = attn.attention_block(lp["attn"], h, cfg, positions,
+                                     causal=True)
+        else:
+            h, _ = mamba2.mamba_block(lp["mamba"], h, cfg)
+        x = x + h
+        if spec.ff is not None:
+            h = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+            if spec.ff == "mlp":
+                h = L.mlp(lp["mlp"], h, cfg)
+            else:
+                h, a = moe_mod.moe(lp["moe"], h, cfg)
+                aux = aux + a
+            x = x + h
+        x = shard(x, "batch", None, "act_embed")
+    return x, aux
+
+
+def apply(params, tokens: jax.Array, cfg: ModelConfig, *,
+          input_embeds: Optional[jax.Array] = None,
+          positions: Optional[jax.Array] = None,
+          last_logits_only: bool = False):
+    """tokens: (B, S) -> logits (B, S, V).  ``input_embeds`` (B, F, d)
+    overrides the first F embedding rows (VLM/audio frontends).
+    ``last_logits_only`` unembeds just the final position (prefill path —
+    a (B, 32k, 200k) logits tensor must never materialize)."""
+    x = L.embed(params["embedding"], tokens, cfg)
+    if input_embeds is not None:
+        f = input_embeds.shape[1]
+        x = jnp.concatenate([input_embeds.astype(x.dtype), x[:, f:]], axis=1)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]),
+                                     tokens.shape)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, block_params):
+        x, aux = carry
+        x, aux = _block_fn(block_params, x, cfg, positions, aux)
+        return (x, aux), None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else body
+    if cfg.scan_blocks:
+        g = cfg.remat_group
+        if cfg.remat and g > 1 and cfg.num_blocks % g == 0:
+            # sqrt-L remat: outer scan over block groups, inner scan over
+            # blocks, checkpoints at both levels -> carry stack is
+            # (L/G + G) slices instead of L (see config.remat_group)
+            ng = cfg.num_blocks // g
+            grouped = jax.tree.map(
+                lambda p: p.reshape((ng, g) + p.shape[1:]),
+                params["blocks"])
+
+            def group(carry, gp):
+                return jax.lax.scan(fn, carry, gp)
+
+            gfn = jax.checkpoint(
+                group, policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux), _ = jax.lax.scan(gfn, (x, aux0), grouped)
+        else:
+            (x, aux), _ = jax.lax.scan(fn, (x, aux0), params["blocks"])
+    else:
+        for i in range(cfg.num_blocks):
+            blk = jax.tree.map(lambda p: p[i], params["blocks"])
+            (x, aux), _ = fn((x, aux0), blk)
+    if last_logits_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits, aux
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, *, aux_weight=0.01):
+    logits, aux = apply(params, batch["tokens"], cfg,
+                        input_embeds=batch.get("input_embeds"))
+    labels = batch["labels"]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = nll.mean()
+    else:
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + aux_weight * aux
+    return total, {"nll": loss, "moe_aux": aux}
+
+
+# -------------------------------------------------------------- decode ---
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    cache: dict[str, Any] = {}
+    nb = cfg.num_blocks
+    na = cfg.attn_layers_per_block
+    nm = cfg.mamba_layers_per_block
+    if na:
+        kv = attn.init_kv_cache(cfg, batch, max_len, nb * na, dtype)
+        cache["k"] = kv["k"].reshape(nb, na, batch, max_len, cfg.kv_dim)
+        cache["v"] = kv["v"].reshape(nb, na, batch, max_len, cfg.kv_dim)
+    if nm:
+        mc = mamba2.init_mamba_cache(cfg, batch, nb * nm, dtype)
+        cache["conv"] = mc["conv"].reshape((nb, nm) + mc["conv"].shape[1:])
+        cache["ssm"] = mc["ssm"].reshape((nb, nm) + mc["ssm"].shape[1:])
+    return cache
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    """Logical axes for cache leaves (for sharding at the jit boundary)."""
+    out = {}
+    if cfg.attn_layers_per_block:
+        out["k"] = (None, None, "batch", "kv_seq", "kv_heads")
+        out["v"] = (None, None, "batch", "kv_seq", "kv_heads")
+    if cfg.mamba_layers_per_block:
+        out["conv"] = (None, None, "batch", None, "ssm_inner")
+        out["ssm"] = (None, None, "batch", None, None)
+    return out
+
+
+def serve_step(params, cache: dict, tokens: jax.Array, pos: jax.Array,
+               cfg: ModelConfig):
+    """One decode step.  tokens: (B, 1), pos: (B,) -> (logits (B, 1, V),
+    new cache).  The KV cache is updated in place at ``pos``."""
+    x = L.embed(params["embedding"], tokens, cfg)
+
+    def body(carry, scanned):
+        x = carry
+        block_params, blk_cache = scanned
+        new_blk_cache = dict(blk_cache)
+        ai = mi = 0
+        for li, spec in enumerate(cfg.block_pattern):
+            lp = block_params[f"l{li}"]
+            h = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+            if spec.mixer == "attn":
+                h, nk, nv = attn.decode_attention(
+                    lp["attn"], h, cfg, blk_cache["k"][ai],
+                    blk_cache["v"][ai], pos)
+                new_blk_cache["k"] = new_blk_cache["k"].at[ai].set(nk)
+                new_blk_cache["v"] = new_blk_cache["v"].at[ai].set(nv)
+                ai += 1
+            else:
+                h, nc, ns = mamba2.mamba_decode(
+                    lp["mamba"], h, cfg, blk_cache["conv"][mi],
+                    blk_cache["ssm"][mi])
+                new_blk_cache["conv"] = new_blk_cache["conv"].at[mi].set(
+                    nc.astype(new_blk_cache["conv"].dtype))
+                new_blk_cache["ssm"] = new_blk_cache["ssm"].at[mi].set(ns)
+                mi += 1
+            x = x + h
+            if spec.ff is not None:
+                h = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                if spec.ff == "mlp":
+                    h = L.mlp(lp["mlp"], h, cfg)
+                else:
+                    h, _ = moe_mod.moe(lp["moe"], h, cfg)
+                x = x + h
+        return x, new_blk_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits, new_cache

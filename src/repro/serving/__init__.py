@@ -1,0 +1,1 @@
+"""Serving runtime: KV-cache slots, continuous batching, basecall server."""

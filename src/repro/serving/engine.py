@@ -1,0 +1,173 @@
+"""Continuous-batching serving engines.
+
+Two engines share the slot machinery:
+
+  * ``LMServer``      — decode loop for the assigned LMs: fixed pool of KV
+                        cache slots; requests are admitted into free slots,
+                        every ``serve_step`` advances *all* active slots one
+                        token (continuous batching), finished slots free
+                        immediately.  This is the decode_32k / long_500k
+                        workload the dry-run lowers.
+  * ``BasecallServer``— the paper's serving shape: raw signal chunks stream
+                        in per channel; chunks are batched across channels,
+                        basecalled (MAT path), CTC-decoded and returned with
+                        latency accounting (p50/p99) — Sec II's "real-time"
+                        requirement made measurable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------- LM ----
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (L,) tokens
+    max_new_tokens: int
+    submitted_at: float = 0.0
+    tokens_out: list = dataclasses.field(default_factory=list)
+    done_at: float = 0.0
+
+
+class LMServer:
+    """Slot-based continuous batching around a jitted serve_step."""
+
+    def __init__(self, model, params, cfg, *, slots: int, max_len: int,
+                 eos: int = -1):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.eos = eos
+        self.cache = model.init_cache(cfg, slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)
+        self.budget = np.zeros((slots,), np.int32)  # remaining new tokens
+        self.active: list[Optional[Request]] = [None] * slots
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._step = jax.jit(
+            lambda p, c, t, pos: model.serve(p, c, t, pos, cfg))
+
+    def submit(self, req: Request):
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                # prefill: feed prompt tokens one by one (simple, exact)
+                for i, tok in enumerate(req.prompt):
+                    tkn = jnp.full((self.slots, 1), 0, jnp.int32).at[s, 0].set(
+                        int(tok))
+                    pos = jnp.asarray(self.pos)
+                    logits, self.cache = self._step(self.params, self.cache,
+                                                    tkn, pos)
+                    self.pos[s] += 1
+                self.budget[s] = req.max_new_tokens
+                nxt = int(jnp.argmax(logits[s, -1]))
+                req.tokens_out.append(nxt)
+
+    def step(self):
+        """One decode step across all active slots."""
+        self._admit()
+        if not any(a is not None for a in self.active):
+            return False
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None and req.tokens_out:
+                toks[s, 0] = req.tokens_out[-1]
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(toks),
+                                        jnp.asarray(self.pos))
+        logits_np = np.asarray(logits[:, -1])
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            self.budget[s] -= 1
+            nxt = int(logits_np[s].argmax())
+            req.tokens_out.append(nxt)
+            hit_eos = (self.eos >= 0 and nxt == self.eos)
+            if self.budget[s] <= 0 or hit_eos \
+                    or self.pos[s] >= self.max_len - 1:
+                req.done_at = time.perf_counter()
+                self.finished.append(req)
+                self.active[s] = None
+                self.pos[s] = 0
+        return True
+
+    def run_until_drained(self, max_steps: int = 100_000):
+        steps = 0
+        while (self.queue or any(a is not None for a in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+
+# ----------------------------------------------------------- basecall ----
+@dataclasses.dataclass
+class ServeStats:
+    latencies_ms: list = dataclasses.field(default_factory=list)
+    bases: int = 0
+    samples: int = 0
+    wall_s: float = 0.0
+
+    def summary(self) -> dict:
+        lat = np.array(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        return {
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "bases_per_s": self.bases / max(self.wall_s, 1e-9),
+            "samples_per_s": self.samples / max(self.wall_s, 1e-9),
+        }
+
+
+class BasecallServer:
+    """Batched streaming basecalls with per-chunk latency accounting."""
+
+    def __init__(self, params, bc_cfg, *, batch: int, chunk: int,
+                 use_kernel: bool = False):
+        import functools
+
+        from repro.core import basecaller, ctc
+        self.params = params
+        self.cfg = bc_cfg
+        self.batch = batch
+        self.chunk = chunk
+        self._apply = jax.jit(functools.partial(
+            basecaller.apply, cfg=bc_cfg, use_kernel=use_kernel))
+        self._decode = jax.jit(ctc.greedy_decode)
+        self.stats = ServeStats()
+
+    def serve(self, signal_chunks: np.ndarray) -> list[np.ndarray]:
+        """signal_chunks: (N, chunk) normalized signal; batches of
+        ``self.batch`` are dispatched; returns decoded token arrays."""
+        out = []
+        t_start = time.perf_counter()
+        for i in range(0, len(signal_chunks), self.batch):
+            chunk_rows = signal_chunks[i: i + self.batch]
+            t0 = time.perf_counter()
+            logits = self._apply(self.params, jnp.asarray(chunk_rows))
+            tokens, lens = self._decode(logits)
+            tokens.block_until_ready()
+            dt = (time.perf_counter() - t0) * 1e3
+            for j in range(len(chunk_rows)):
+                self.stats.latencies_ms.append(dt)
+                ln = int(lens[j])
+                out.append(np.asarray(tokens[j][:ln]))
+                self.stats.bases += ln
+            self.stats.samples += int(chunk_rows.size)
+        self.stats.wall_s += time.perf_counter() - t_start
+        return out

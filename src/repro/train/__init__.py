@@ -1,0 +1,1 @@
+"""Training runtime: optimizer, trainer, checkpointing, fault tolerance."""

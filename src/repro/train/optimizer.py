@@ -1,0 +1,124 @@
+"""AdamW + LR schedules (pure JAX; optax is not available in this image).
+
+Production details that matter at pod scale:
+  * configurable moment dtype — bf16 moments halve optimizer HBM for the
+    >300B archs (update math still runs in f32; quantization error is
+    bounded in tests/test_optimizer.py),
+  * decay masking by tree path (no decay on norms/biases/1-D leaves),
+  * global-norm clipping fused into the update step,
+  * WSD (warmup-stable-decay) schedule from the MiniCPM paper, cosine, and
+    linear — selected per arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"        # cosine | wsd | linear | constant
+    wsd_decay_frac: float = 0.1     # final fraction of steps spent decaying
+    min_lr_frac: float = 0.1
+    state_dtype: str = "float32"    # float32 | bfloat16 moments
+
+
+def schedule_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((s - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        base = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # stable at 1.0 until the final decay_frac, then linear to min
+        decay_start = 1.0 - cfg.wsd_decay_frac
+        frac = jnp.clip((t - decay_start) / cfg.wsd_decay_frac, 0, 1)
+        base = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+    elif cfg.schedule == "linear":
+        base = 1.0 - (1.0 - cfg.min_lr_frac) * t
+    elif cfg.schedule == "constant":
+        base = jnp.ones_like(t)
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * base
+
+
+def _decay_mask(params) -> Any:
+    """True where weight decay applies: >=2-D leaves only."""
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_axes(param_axes):
+    """Optimizer moments shard exactly like their parameters."""
+    return {
+        "m": param_axes,
+        "v": param_axes,
+        "step": (),
+    }
+
+
+def apply_update(params, grads, opt_state, cfg: OptimizerConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v, decay):
+        g = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0:
+            delta = delta + (cfg.weight_decay * decay) * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_mask = jax.tree.leaves(mask)
+    out = [upd(p, g, m, v, jnp.float32(dk))
+           for p, g, m, v, dk in zip(flat_p, flat_g, flat_m, flat_v,
+                                     flat_mask)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,19 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_global_norm,
+    tree_cast,
+    tree_zeros_like,
+)
+from repro.utils.shapes import pad_to_multiple, ceil_div, next_multiple
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_global_norm",
+    "tree_cast",
+    "tree_zeros_like",
+    "pad_to_multiple",
+    "ceil_div",
+    "next_multiple",
+]

@@ -1,0 +1,23 @@
+"""Shape utilities shared by kernels and model code."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def next_multiple(x: int, m: int) -> int:
+    return ceil_div(x, m) * m
+
+
+def pad_to_multiple(x, multiple: int, axis: int, value=0):
+    """Pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    target = next_multiple(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)

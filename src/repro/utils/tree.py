@@ -1,0 +1,58 @@
+"""Pytree arithmetic helpers used by the optimizer, trainer and checkpointing.
+
+These are deliberately tiny and dependency-free (no optax in this
+environment); everything operates on arbitrary pytrees of jax arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree (using each leaf's dtype)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_global_norm(tree) -> jax.Array:
+    """Global L2 norm across all leaves (f32 accumulation)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_cast(tree, dtype):
+    """Cast every floating leaf to ``dtype`` (integers untouched)."""
+
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(cast, tree)
+
+
+def tree_zeros_like(tree, dtype=None):
+    def z(x):
+        return jnp.zeros(x.shape, dtype or x.dtype)
+
+    return jax.tree.map(z, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)

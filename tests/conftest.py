@@ -1,0 +1,24 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here — unit tests and smokes must see the real single
+CPU device; only the dry-run (and the subprocess-based mini dry-run test)
+force a virtual device count.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,61 @@
+"""Basecaller: paper-claimed structure + kernel/XLA path parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import basecaller as bc
+from repro.data import nanopore
+
+
+def test_paper_structure(key):
+    cfg = bc.BasecallerConfig()
+    params = bc.init(key, cfg)
+    n = bc.num_params(params)
+    # paper: "about 450K parameters in total"
+    assert 400_000 < n < 500_000, n
+    # paper: "About 80% of the weights reside in two layers"
+    conc = bc.weight_concentration(params)
+    assert 0.75 < conc < 0.92, conc
+    # paper: six layers, ReLU separated
+    assert len(cfg.kernels) == 6
+    # paper: "deconvolve ... a window of 8 bases" (~9 samples/base)
+    assert 6 <= cfg.receptive_field / 9.0 <= 10
+
+
+def test_output_shape_and_finite(key, rng):
+    cfg = bc.BasecallerConfig()
+    params = bc.init(key, cfg)
+    batch = nanopore.make_ctc_batch(rng, batch=2, seq_len=40)
+    logits = bc.apply(params, jnp.asarray(batch["signal"]), cfg)
+    assert logits.shape[0] == 2 and logits.shape[2] == bc.NUM_CLASSES
+    assert logits.shape[1] == bc.output_len(cfg, batch["signal"].shape[1])
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_kernel_path_matches_xla(key, rng):
+    cfg = bc.BasecallerConfig()
+    params = bc.init(key, cfg)
+    sig = jnp.asarray(rng.normal(size=(1, 512)).astype(np.float32))
+    xla = bc.apply(params, sig, cfg, use_kernel=False)
+    kern = bc.apply(params, sig, cfg, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(kern),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gradients_flow(key, rng):
+    from repro.core import ctc
+    cfg = bc.BasecallerConfig()
+    params = bc.init(key, cfg)
+    batch = nanopore.make_ctc_batch(rng, batch=2, seq_len=24)
+
+    def loss(p):
+        logits = bc.apply(p, jnp.asarray(batch["signal"]), cfg)
+        lp = jnp.asarray(batch["signal_paddings"])[:, :: cfg.total_stride]
+        lp = lp[:, : logits.shape[1]]
+        return ctc.ctc_loss(logits, lp, jnp.asarray(batch["labels"]),
+                            jnp.asarray(batch["label_paddings"])).mean()
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert bool(jnp.isfinite(val))
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0

@@ -1,0 +1,112 @@
+"""CTC loss against brute-force path enumeration + decoder behaviour."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ctc
+
+
+def brute_ctc(logits: np.ndarray, label) -> float:
+    t, c = logits.shape
+    lp = np.asarray(jax.nn.log_softmax(jnp.asarray(logits), -1))
+
+    def collapse(path):
+        out, prev = [], -1
+        for p in path:
+            if p != prev and p != 0:
+                out.append(p)
+            prev = p
+        return tuple(out)
+
+    total = -np.inf
+    for path in itertools.product(range(c), repeat=t):
+        if collapse(path) == tuple(label):
+            total = np.logaddexp(total, sum(lp[i, p]
+                                            for i, p in enumerate(path)))
+    return -total
+
+
+def run_loss(logits, label, lpad_to=4):
+    t = logits.shape[0]
+    labels = np.zeros((1, lpad_to), np.int32)
+    labels[0, : len(label)] = label
+    lpad = np.ones((1, lpad_to), np.float32)
+    lpad[0, : len(label)] = 0
+    return float(ctc.ctc_loss(jnp.asarray(logits[None]), jnp.zeros((1, t)),
+                              jnp.asarray(labels), jnp.asarray(lpad))[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 6), st.integers(0, 3), st.integers(0, 10_000))
+def test_vs_brute_force(t, label_len, seed):
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(t, 3)).astype(np.float32)
+    label = rng.integers(1, 3, size=label_len).astype(np.int32)
+    want = brute_ctc(logits, label)
+    got = run_loss(logits, label)
+    if np.isinf(want):
+        assert got > 1e5
+    else:
+        assert abs(want - got) < 1e-3
+
+
+def test_trailing_pad_invariance(rng):
+    t = 6
+    logits = rng.normal(size=(1, t, 3)).astype(np.float32)
+    lab = np.array([[1, 2, 0]], np.int32)
+    lp = np.array([[0.0, 0.0, 1.0]], np.float32)
+    base = float(ctc.ctc_loss(jnp.asarray(logits), jnp.zeros((1, t)), lab,
+                              lp)[0])
+    logits2 = np.concatenate(
+        [logits, rng.normal(size=(1, 3, 3)).astype(np.float32)], 1)
+    pad2 = np.concatenate([np.zeros((1, t)), np.ones((1, 3))],
+                          1).astype(np.float32)
+    padded = float(ctc.ctc_loss(jnp.asarray(logits2), jnp.asarray(pad2), lab,
+                                lp)[0])
+    assert abs(base - padded) < 1e-4
+
+
+def test_loss_differentiable(rng):
+    logits = jnp.asarray(rng.normal(size=(2, 8, 5)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(1, 5, (2, 3)).astype(np.int32))
+    lpad = jnp.zeros((2, 3))
+
+    def loss(lg):
+        return ctc.ctc_loss(lg, jnp.zeros((2, 8)), labels, lpad).mean()
+
+    g = jax.grad(loss)(logits)
+    assert bool(jnp.isfinite(g).all())
+    assert float(jnp.abs(g).max()) > 0
+
+
+def test_greedy_collapse():
+    logits = np.full((1, 7, 5), -5.0, np.float32)
+    for t, c in enumerate([1, 1, 0, 2, 0, 3, 3]):
+        logits[0, t, c] = 5.0
+    toks, lens = ctc.greedy_decode(jnp.asarray(logits))
+    assert list(np.asarray(toks[0][: int(lens[0])])) == [1, 2, 3]
+
+
+def test_beam_matches_greedy_on_peaked():
+    logits = np.full((8, 5), -8.0, np.float32)
+    for t, c in enumerate([1, 0, 2, 2, 0, 3, 4, 4]):
+        logits[t, c] = 8.0
+    out = ctc.beam_decode_np(logits, beam=4)
+    assert list(out) == [1, 2, 3, 4]
+
+
+def test_viterbi_score_finite(rng):
+    logits = jnp.asarray(rng.normal(size=(2, 16, 5)).astype(np.float32))
+    toks, lens, score = ctc.viterbi_decode(logits)
+    assert bool(jnp.isfinite(score).all())
+    assert toks.shape == (2, 16)
+
+
+def test_token_string_roundtrip():
+    s = "ACGTTGCA"
+    toks = ctc.str_to_tokens(s)
+    assert ctc.tokens_to_str(toks) == s

@@ -1,0 +1,69 @@
+"""Hypothesis property tests: the ED kernel satisfies metric axioms."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+seq = st.lists(st.integers(1, 4), min_size=1, max_size=24)
+
+
+def dist(q, t):
+    qa = np.array([q], np.int32)
+    ta = np.array([t], np.int32)
+    return int(ops.edit_distance(jnp.asarray(qa), jnp.asarray(ta),
+                                 block_p=8)[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seq)
+def test_identity(a):
+    assert dist(a, a) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seq, seq)
+def test_symmetry(a, b):
+    assert dist(a, b) == dist(b, a)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seq, seq, seq)
+def test_triangle_inequality(a, b, c):
+    assert dist(a, c) <= dist(a, b) + dist(b, c)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seq, seq)
+def test_bounds(a, b):
+    d = dist(a, b)
+    assert abs(len(a) - len(b)) <= d <= max(len(a), len(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seq, seq)
+def test_matches_classic_dp(a, b):
+    want = ref.edit_distance_np(np.array(a), np.array(b))
+    assert dist(a, b) == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(seq, st.integers(0, 3))
+def test_single_edit_distance_one(a, kind):
+    a = list(a)
+    b = list(a)
+    if kind == 0 and b:                      # substitution
+        b[0] = (b[0] % 4) + 1
+        expected = 0 if b[0] == a[0] else 1
+    elif kind == 1:                          # insertion
+        b.insert(len(b) // 2, 1)
+        expected = 1
+    elif kind == 2 and len(b) > 1:           # deletion
+        b.pop()
+        expected = 1
+    else:
+        expected = 0
+    if expected == 0 and b == a:
+        assert dist(a, b) == 0
+    else:
+        assert dist(a, b) <= 1

@@ -1,0 +1,50 @@
+"""FM-index: batched backward search == naive string scan (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fm_index
+
+
+def naive_find(genome: np.ndarray, seed: np.ndarray):
+    n, k = len(genome), len(seed)
+    return np.array([i for i in range(n - k + 1)
+                     if (genome[i: i + k] == seed).all()], np.int64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(30, 200), st.integers(3, 8))
+def test_search_matches_naive(seed_val, glen, klen):
+    rng = np.random.default_rng(seed_val)
+    genome = rng.integers(1, 5, glen).astype(np.int32)
+    idx = fm_index.FMIndex.build(genome)
+    arrays = idx.device_arrays()
+    seeds = np.stack([genome[i: i + klen]
+                      for i in rng.integers(0, glen - klen, 6)])
+    count, pos = fm_index.backward_search(arrays, seeds, max_hits=16)
+    for row in range(len(seeds)):
+        want = naive_find(genome, seeds[row])
+        assert int(count[row]) == len(want)
+        got = sorted(int(p) for p in np.asarray(pos[row]) if p >= 0)
+        assert got == sorted(want[:16].tolist())[: len(got)]
+        # every reported position is a real match
+        for p in got:
+            np.testing.assert_array_equal(genome[p: p + klen], seeds[row])
+
+
+def test_absent_seed_zero_hits(rng):
+    genome = np.array([1, 2, 3, 4] * 25, np.int32)
+    idx = fm_index.FMIndex.build(genome)
+    seeds = np.array([[1, 1, 1, 1]], np.int32)  # never occurs in (1234)*
+    count, pos = fm_index.backward_search(idx.device_arrays(), seeds)
+    assert int(count[0]) == 0
+    assert (np.asarray(pos[0]) == -1).all()
+
+
+def test_suffix_array_sorted(rng):
+    genome = rng.integers(1, 5, 200).astype(np.int32)
+    seq = np.concatenate([genome.astype(np.int64), [0]])
+    sa = fm_index.suffix_array(seq)
+    # adjacent suffixes must be lexicographically ordered
+    for i in range(len(sa) - 1):
+        a, b = sa[i], sa[i + 1]
+        assert tuple(seq[a:]) < tuple(seq[b:])

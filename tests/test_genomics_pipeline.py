@@ -1,0 +1,136 @@
+"""Alignment, pathogen detection, demux, variant-caller plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fm_index, pathogen, pipeline, seed_extend, variant_caller
+from repro.data import genome as G
+
+
+@pytest.fixture(scope="module")
+def small_genome():
+    rng = np.random.default_rng(42)
+    return G.random_genome(rng, 8000)
+
+
+@pytest.fixture(scope="module")
+def small_index(small_genome):
+    return fm_index.FMIndex.build(small_genome)
+
+
+class TestAlignment:
+    def test_exact_reads_align(self, small_genome, small_index):
+        rng = np.random.default_rng(0)
+        reads, pos = G.sample_reads(rng, small_genome, n_reads=16,
+                                    read_len=120)
+        res = seed_extend.align_reads(small_index, small_genome, reads)
+        assert res.accepted.all()
+        assert (np.abs(res.positions - pos) <= 48).all()
+
+    def test_noisy_reads_align(self, small_genome, small_index):
+        rng = np.random.default_rng(1)
+        reads, pos = G.sample_reads(rng, small_genome, n_reads=16,
+                                    read_len=150, error_rate=0.05)
+        res = seed_extend.align_reads(small_index, small_genome, reads)
+        assert res.accepted.mean() > 0.8
+        ok = res.accepted
+        assert (np.abs(res.positions[ok] - pos[ok]) <= 48).all()
+
+    def test_random_reads_rejected(self, small_genome, small_index):
+        rng = np.random.default_rng(2)
+        junk = rng.integers(1, 5, (8, 120)).astype(np.int32)
+        res = seed_extend.align_reads(small_index, small_genome, junk)
+        assert res.accepted.mean() <= 0.25
+
+
+class TestPathogen:
+    @pytest.fixture(scope="class")
+    def panel(self):
+        rng = np.random.default_rng(3)
+        return pathogen.Panel.build({
+            "virusA": G.random_genome(rng, 3000),
+            "virusB": G.random_genome(rng, 4000),
+        })
+
+    @pytest.mark.parametrize("mode", ["ed", "fm"])
+    def test_detects_present_only(self, panel, mode):
+        rng = np.random.default_rng(4)
+        reads, _ = G.sample_reads(rng, panel.genomes[0], n_reads=10,
+                                  read_len=96, error_rate=0.03)
+        noise = rng.integers(1, 5, (4, 96)).astype(np.int32)
+        rep = pathogen.detect(panel, np.concatenate([reads, noise]),
+                              pathogen.DetectConfig(window=192), mode=mode)
+        assert rep.present["virusA"]
+        assert not rep.present["virusB"]
+        assert rep.counts["virusA"] >= 8
+
+    def test_no_false_positive_on_noise(self, panel):
+        rng = np.random.default_rng(5)
+        noise = rng.integers(1, 5, (12, 96)).astype(np.int32)
+        rep = pathogen.detect(panel, noise,
+                              pathogen.DetectConfig(window=192), mode="ed")
+        assert not any(rep.present.values())
+
+
+class TestPipelineGlue:
+    def test_demux_assigns_barcodes(self):
+        rng = np.random.default_rng(6)
+        barcodes = rng.integers(1, 5, (4, 12)).astype(np.int32)
+        reads = np.zeros((8, 60), np.int32)
+        owners = rng.integers(0, 4, 8)
+        for i, o in enumerate(owners):
+            reads[i, :12] = barcodes[o]
+            reads[i, 12:] = rng.integers(1, 5, 48)
+            if i % 2 == 0:  # one error in the barcode
+                reads[i, 3] = (reads[i, 3] % 4) + 1
+        got = pipeline.demux_reads(reads, barcodes, max_dist=3)
+        np.testing.assert_array_equal(got, owners)
+
+    def test_trim_primer(self):
+        toks = np.array([[1, 2, 3, 4, 1, 0, 0]], np.int32)
+        lens = np.array([5])
+        out, new_lens = pipeline.trim_primer(toks, lens, 2)
+        assert new_lens[0] == 3
+        np.testing.assert_array_equal(out[0, :3], [3, 4, 1])
+
+    def test_streaming_pipeline_runs(self, key):
+        from repro.core import basecaller as bc
+        cfg = bc.BasecallerConfig(kernels=(3, 3, 1), channels=(16, 16, 5),
+                                  strides=(1, 2, 1))
+        params = bc.init(key, cfg)
+        pipe = pipeline.StreamingBasecallPipeline(params, cfg)
+        rng = np.random.default_rng(7)
+        chunks = [rng.normal(size=(4, 512)).astype(np.float32)
+                  for _ in range(3)]
+        outs = list(pipe.run(iter(chunks)))
+        assert len(outs) == 3
+        assert pipe.stats.chunks == 3
+        assert pipe.stats.samples_in == 3 * 4 * 512
+
+
+class TestVariantCaller:
+    def test_pileup_and_sites(self):
+        rng = np.random.default_rng(8)
+        genome = G.random_genome(rng, 500)
+        mutated = genome.copy()
+        mutated[100] = (mutated[100] % 4) + 1  # SNP
+        reads, pos = G.sample_reads(rng, mutated, n_reads=60, read_len=80)
+        pile = variant_caller.build_pileup(genome, reads, pos)
+        assert pile.shape == (500, variant_caller.N_FEATURES)
+        sites = variant_caller.candidate_sites(pile)
+        assert 100 in sites.tolist()
+
+    def test_model_trains(self, key):
+        cfg = variant_caller.CallerConfig(window=17, channels=(16, 32),
+                                          hidden=32)
+        params = variant_caller.init(key, cfg)
+        rng = np.random.default_rng(9)
+        wins = jnp.asarray(rng.normal(size=(16, 17, 9)).astype(np.float32))
+        gt = jnp.asarray(rng.integers(0, 3, 16).astype(np.int32))
+        alt = jnp.asarray(rng.integers(0, 4, 16).astype(np.int32))
+        loss0 = variant_caller.loss_fn(params, wins, gt, alt, cfg)
+        g = jax.grad(variant_caller.loss_fn)(params, wins, gt, alt, cfg)
+        params2 = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+        loss1 = variant_caller.loss_fn(params2, wins, gt, alt, cfg)
+        assert float(loss1) < float(loss0)

@@ -1,0 +1,169 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128),
+                                       (300, 200, 260), (8, 128, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes(self, m, k, n, dtype):
+        a = jax.random.normal(jax.random.key(0), (m, k), dtype)
+        b = jax.random.normal(jax.random.key(1), (k, n), dtype)
+        out = ops.mat_mul(a, b, block_m=128, block_n=128, block_k=128)
+        exp = ref.matmul(a, b)
+        # f32 tolerance scales with K (blockwise accumulation order differs)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6 * k
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   exp.astype(jnp.float32), rtol=tol,
+                                   atol=tol)
+
+    @pytest.mark.parametrize("act", ["relu", "squared_relu", "silu", "gelu"])
+    def test_fused_activation_bias(self, act):
+        a = jax.random.normal(jax.random.key(0), (256, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 256), jnp.float32)
+        bias = jax.random.normal(jax.random.key(2), (256,), jnp.float32)
+        out = ops.mat_mul(a, b, bias, activation=act,
+                          block_m=128, block_n=128, block_k=128)
+        exp = ref.matmul(a, b, bias, activation=act)
+        np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+    def test_int8_path(self):
+        a = jax.random.randint(jax.random.key(0), (256, 128), -10, 10,
+                               jnp.int8)
+        b = jax.random.randint(jax.random.key(1), (128, 128), -10, 10,
+                               jnp.int8)
+        out = ops.mat_mul(a, b, block_m=128, block_n=128, block_k=128)
+        assert out.dtype == jnp.int32
+        np.testing.assert_array_equal(out, ref.matmul(a, b))
+
+    def test_grid_k_accumulation(self):
+        # K spans multiple grid steps: accumulation across blocks
+        a = jax.random.normal(jax.random.key(0), (128, 1024), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (1024, 128), jnp.float32)
+        out = ops.mat_mul(a, b, block_m=128, block_n=128, block_k=256)
+        np.testing.assert_allclose(out, ref.matmul(a, b), rtol=2e-4,
+                                   atol=2e-4)
+
+
+class TestConv1d:
+    @pytest.mark.parametrize("stride", [1, 2, 3])
+    @pytest.mark.parametrize("padding", ["same", "valid"])
+    def test_stride_padding(self, stride, padding):
+        x = jax.random.normal(jax.random.key(0), (2, 333, 16), jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (5, 16, 130), jnp.float32)
+        b = jax.random.normal(jax.random.key(2), (130,), jnp.float32)
+        out = ops.conv1d(x, w, b, stride=stride, padding=padding,
+                         activation="relu", block_t=64, block_n=128)
+        xx = x
+        if padding == "same":
+            t = x.shape[1]
+            t_out = -(-t // stride)
+            ptot = max((t_out - 1) * stride + 5 - t, 0)
+            xx = jnp.pad(x, ((0, 0), (ptot // 2, ptot - ptot // 2), (0, 0)))
+        exp = ref.conv1d(xx, w, b, stride=stride, activation="relu")
+        np.testing.assert_allclose(out, exp, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("ksize", [1, 3, 9])
+    def test_kernel_width(self, ksize):
+        x = jax.random.normal(jax.random.key(0), (1, 256, 32), jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (ksize, 32, 128), jnp.float32)
+        out = ops.conv1d(x, w, padding="valid", block_t=64)
+        exp = ref.conv1d(x, w)
+        np.testing.assert_allclose(out, exp, rtol=2e-4, atol=2e-4)
+
+
+class TestEditDistance:
+    @pytest.mark.parametrize("m,n", [(16, 16), (37, 45), (64, 32), (1, 50)])
+    def test_vs_numpy_dp(self, rng, m, n):
+        p = 16
+        q = rng.integers(0, 4, (p, m)).astype(np.int32)
+        t = rng.integers(0, 4, (p, n)).astype(np.int32)
+        got = np.asarray(ops.edit_distance(jnp.asarray(q), jnp.asarray(t),
+                                           block_p=8))
+        want = np.array([ref.edit_distance_np(q[i], t[i]) for i in range(p)])
+        np.testing.assert_array_equal(got, want)
+
+    def test_identical_and_disjoint(self):
+        q = jnp.ones((8, 20), jnp.int32)
+        d = np.asarray(ops.edit_distance(q, q, block_p=8))
+        np.testing.assert_array_equal(d, 0)
+        t = jnp.full((8, 20), 2, jnp.int32)
+        d = np.asarray(ops.edit_distance(q, t, block_p=8))
+        np.testing.assert_array_equal(d, 20)
+
+    @pytest.mark.parametrize("local", [False, True])
+    @pytest.mark.parametrize("band", [4, 12, 64])
+    def test_banded_vs_ref(self, rng, local, band):
+        p, m, n = 16, 37, 45
+        q = rng.integers(0, 4, (p, m)).astype(np.int32)
+        t = rng.integers(0, 4, (p, n)).astype(np.int32)
+        got = np.asarray(ops.banded_align(jnp.asarray(q), jnp.asarray(t),
+                                          band=band, local=local, block_p=8))
+        want = np.asarray(ref.banded_align(jnp.asarray(q), jnp.asarray(t),
+                                           band=band, local=local))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+    def test_gqa_causal(self, causal, hq, hkv):
+        b, sq, skv, d = 2, 128, 128, 64
+        q = jax.random.normal(jax.random.key(0), (b, hq, sq, d), jnp.float32)
+        k = jax.random.normal(jax.random.key(1), (b, hkv, skv, d), jnp.float32)
+        v = jax.random.normal(jax.random.key(2), (b, hkv, skv, d), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=causal, block_q=32,
+                                  block_k=32)
+        exp = ref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+    def test_decode_alignment(self):
+        # Sq < Skv: causal mask aligns to the last token
+        b, hq, hkv, d = 1, 4, 2, 64
+        q = jax.random.normal(jax.random.key(0), (b, hq, 32, d), jnp.float32)
+        k = jax.random.normal(jax.random.key(1), (b, hkv, 128, d), jnp.float32)
+        v = jax.random.normal(jax.random.key(2), (b, hkv, 128, d), jnp.float32)
+        out = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+        exp = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out, exp, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16])
+    def test_bf16(self, dtype):
+        b, h, s, d = 1, 2, 64, 64
+        q = jax.random.normal(jax.random.key(0), (b, h, s, d), dtype)
+        k = jax.random.normal(jax.random.key(1), (b, h, s, d), dtype)
+        v = jax.random.normal(jax.random.key(2), (b, h, s, d), dtype)
+        out = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+        exp = ref.attention(q, k, v)
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   exp.astype(jnp.float32), rtol=3e-2,
+                                   atol=3e-2)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("t,chunk", [(64, 16), (100, 32), (32, 32)])
+    def test_vs_recurrence(self, t, chunk):
+        bh, dh, ds = 3, 16, 32
+        x = jax.random.normal(jax.random.key(0), (bh, t, dh)) * 0.5
+        la = -jax.nn.softplus(jax.random.normal(jax.random.key(1), (bh, t)))
+        b = jax.random.normal(jax.random.key(2), (bh, t, ds)) * 0.3
+        c = jax.random.normal(jax.random.key(3), (bh, t, ds)) * 0.3
+        y = ops.ssd_scan(x, la, b, c, chunk=chunk)
+        ye, _ = ref.ssd_scan(x, la, b, c)
+        np.testing.assert_allclose(y, ye, rtol=2e-4, atol=2e-4)
+
+    def test_strong_decay_forgets(self):
+        # with log_a ~ -inf the scan reduces to per-step C.B^T x
+        bh, t, dh, ds = 2, 32, 8, 8
+        x = jax.random.normal(jax.random.key(0), (bh, t, dh))
+        la = jnp.full((bh, t), -40.0)
+        b = jax.random.normal(jax.random.key(2), (bh, t, ds))
+        c = jax.random.normal(jax.random.key(3), (bh, t, ds))
+        y = ops.ssd_scan(x, la, b, c, chunk=8)
+        exp = jnp.einsum("pts,pts->pt", c, b)[..., None] * x
+        np.testing.assert_allclose(y, exp, rtol=2e-4, atol=2e-4)

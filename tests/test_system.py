@@ -1,0 +1,127 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline — squiggle -> basecall -> decode -> demux -> align ->
+detect — exercised with a quick-trained micro-basecaller on an easy signal
+regime (low noise, long dwell).  Accuracy claims for the paper's operating
+point live in examples/train_basecaller.py + EXPERIMENTS.md; this test
+checks the system plumbing learns and flows end-to-end.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import basecaller as bc
+from repro.core import ctc, pathogen
+from repro.data import genome as G
+from repro.data import nanopore
+from repro.train import optimizer as opt
+
+EASY_PORE = nanopore.PoreModel(k=1, mean_dwell=6.0, min_dwell=4, noise=0.02,
+                               drift=0.0)
+
+
+@pytest.fixture(scope="module")
+def trained_micro_basecaller():
+    cfg = bc.BasecallerConfig(kernels=(5, 5, 3), channels=(48, 64, 5),
+                              strides=(1, 2, 2))
+    params = bc.init(jax.random.key(0), cfg)
+    ocfg = opt.OptimizerConfig(lr=3e-3, warmup_steps=20, total_steps=220,
+                               schedule="cosine", weight_decay=0.0)
+    state = opt.init_opt_state(params, ocfg)
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def step(params, state, signal, spad, labels, lpad):
+        def loss_fn(p):
+            logits = bc.apply(p, signal, cfg)
+            lp = spad[:, :: cfg.total_stride][:, : logits.shape[1]]
+            return ctc.ctc_loss(logits, lp, labels, lpad).mean()
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = opt.apply_update(params, g, state, ocfg)
+        return params, state, loss
+
+    losses = []
+    for i in range(220):
+        b = nanopore.make_ctc_batch(rng, batch=8, seq_len=30, pm=EASY_PORE)
+        params, state, loss = step(
+            params, state, jnp.asarray(b["signal"]),
+            jnp.asarray(b["signal_paddings"]), jnp.asarray(b["labels"]),
+            jnp.asarray(b["label_paddings"]))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+    return cfg, params
+
+
+def read_accuracy(cfg, params, rng, n=8, seq_len=30):
+    from repro.kernels import ops as kops
+    correct = total = 0
+    for _ in range(n):
+        seq = rng.integers(1, 5, seq_len).astype(np.int32)
+        sig, _ = nanopore.simulate_read(rng, seq, EASY_PORE)
+        sig = nanopore.normalize(sig)
+        logits = bc.apply(params, jnp.asarray(sig[None]), cfg)
+        toks, lens = ctc.greedy_decode(logits)
+        called = np.asarray(toks[0][: int(lens[0])])
+        d = int(kops.edit_distance(
+            jnp.asarray(np.pad(called, (0, max(seq_len - len(called), 0)))[
+                None, :seq_len]),
+            jnp.asarray(seq[None]))[0])
+        correct += seq_len - min(d, seq_len)
+        total += seq_len
+    return correct / total
+
+
+def test_basecaller_learns_signal(trained_micro_basecaller):
+    cfg, params = trained_micro_basecaller
+    # fresh seeded rng: the shared session rng makes eval data depend on
+    # test execution order (observed 0.59-0.74 swings)
+    acc = read_accuracy(cfg, params, np.random.default_rng(77), n=16)
+    # micro-model, 220 steps, easy regime: it must beat random (25%) by far
+    assert acc > 0.55, acc
+
+
+def test_end_to_end_pathogen_detection(trained_micro_basecaller, rng):
+    """Squiggle from virus genome -> basecall -> detect against a panel."""
+    cfg, params = trained_micro_basecaller
+    panel_rng = np.random.default_rng(11)
+    panel = pathogen.Panel.build({
+        "target": G.random_genome(panel_rng, 2000),
+        "other": G.random_genome(panel_rng, 2000),
+    }, with_index=False)
+
+    reads = []
+    for _ in range(10):
+        start = rng.integers(0, 2000 - 40)
+        seq = panel.genomes[0][start: start + 40]
+        sig, _ = nanopore.simulate_read(rng, seq, EASY_PORE)
+        sig = nanopore.normalize(sig)
+        logits = bc.apply(params, jnp.asarray(sig[None]), cfg)
+        toks, lens = ctc.greedy_decode(logits)
+        called = np.asarray(toks[0][: int(lens[0])])[:40]
+        reads.append(np.pad(called, (0, 40 - len(called))))
+    reads = np.stack(reads).astype(np.int32)
+
+    rep = pathogen.detect(
+        panel, reads,
+        pathogen.DetectConfig(window=96, min_read_frac=0.45, min_reads=5),
+        mode="ed")
+    assert rep.present["target"]
+    assert not rep.present["other"]
+
+
+def test_soc_model_reproduces_paper_numbers():
+    from repro.core.soc_model import SoCModel
+    checks = SoCModel().validate()
+    for name, (modeled, reported, rel_err) in checks.items():
+        assert rel_err < 0.05, (name, modeled, reported)
+
+
+def test_ingest_rate_claim():
+    """Paper Sec II-B.1: hand-sized sequencers reach ~30 Mb/s, >100x audio."""
+    bps = nanopore.raw_bitrate_bps(channels=512)
+    assert bps > 30e6 * 0.9
+    assert bps / 256e3 > 100

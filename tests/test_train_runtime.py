@@ -1,0 +1,181 @@
+"""Optimizer, trainer (grad accum), checkpointing, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import compression
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train import trainer
+
+
+def quad_loss(params, batch, cfg=None):
+    x = params["w"] - batch["target"]
+    return jnp.mean(jnp.square(x)), {}
+
+
+class TestOptimizer:
+    def test_adamw_converges_quadratic(self):
+        cfg = opt.OptimizerConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                                  total_steps=200, schedule="constant",
+                                  clip_norm=0)
+        params = {"w": jnp.ones((8,)) * 5.0}
+        state = opt.init_opt_state(params, cfg)
+        target = jnp.arange(8.0)
+        for _ in range(200):
+            g = jax.grad(lambda p: quad_loss(p, {"target": target})[0])(params)
+            params, state, _ = opt.apply_update(params, g, state, cfg)
+        np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+    def test_schedules(self):
+        for sched in ("cosine", "wsd", "linear", "constant"):
+            cfg = opt.OptimizerConfig(lr=1e-3, warmup_steps=10,
+                                      total_steps=100, schedule=sched)
+            lr0 = float(opt.schedule_lr(cfg, jnp.asarray(1)))
+            lr_mid = float(opt.schedule_lr(cfg, jnp.asarray(50)))
+            lr_end = float(opt.schedule_lr(cfg, jnp.asarray(100)))
+            assert lr0 < lr_mid  # warmup
+            assert lr_end <= lr_mid + 1e-12
+            if sched == "wsd":  # stable plateau at peak until decay phase
+                assert abs(lr_mid - cfg.lr) < 1e-9
+
+    def test_bf16_moments_close_to_f32(self):
+        params = {"w": jnp.ones((64,)) * 2.0}
+        target = jnp.linspace(-1, 1, 64)
+        outs = {}
+        for sd in ("float32", "bfloat16"):
+            cfg = opt.OptimizerConfig(lr=0.05, weight_decay=0.0,
+                                      warmup_steps=0, total_steps=50,
+                                      schedule="constant", state_dtype=sd,
+                                      clip_norm=0)
+            p = dict(params)
+            st = opt.init_opt_state(p, cfg)
+            for _ in range(50):
+                g = jax.grad(lambda q: quad_loss(q, {"target": target})[0])(p)
+                p, st, _ = opt.apply_update(p, g, st, cfg)
+            outs[sd] = p["w"]
+        err = float(jnp.abs(outs["bfloat16"] - outs["float32"]).max())
+        assert err < 0.05, err
+
+    def test_decay_mask_skips_1d(self):
+        cfg = opt.OptimizerConfig(lr=0.0, weight_decay=1.0, warmup_steps=0,
+                                  schedule="constant")
+        params = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+        state = opt.init_opt_state(params, cfg)
+        g = jax.tree.map(jnp.zeros_like, params)
+        p2, _, _ = opt.apply_update(params, g, state, cfg)
+        # lr=0: nothing moves regardless; use lr>0 to see decay on 2D only
+        cfg2 = opt.OptimizerConfig(lr=0.1, weight_decay=1.0, warmup_steps=0,
+                                   schedule="constant", clip_norm=0)
+        p3, _, _ = opt.apply_update(params, g, state, cfg2)
+        assert float(jnp.abs(p3["w"] - 1.0).max()) > 1e-4      # decayed
+        assert float(jnp.abs(p3["scale"] - 1.0).max()) < 1e-6  # masked
+
+
+class TestTrainer:
+    def test_grad_accum_matches_full_batch(self):
+        cfg = opt.OptimizerConfig(lr=1e-2, warmup_steps=0,
+                                  schedule="constant", weight_decay=0,
+                                  clip_norm=0)
+
+        def loss_fn(params, batch, _cfg):
+            pred = batch["x"] @ params["w"]
+            return jnp.mean(jnp.square(pred - batch["y"])), {}
+
+        params = {"w": jnp.ones((4, 2)) * 0.1}
+        batch = {
+            "x": jax.random.normal(jax.random.key(0), (8, 4)),
+            "y": jax.random.normal(jax.random.key(1), (8, 2)),
+        }
+        outs = {}
+        for accum in (1, 4):
+            step = trainer.make_train_step(
+                loss_fn, None, cfg,
+                trainer.TrainerConfig(grad_accum=accum))
+            state = {"params": dict(params),
+                     "opt": opt.init_opt_state(params, cfg)}
+            state, metrics = step(state, batch)
+            outs[accum] = (state["params"]["w"], float(metrics["loss"]))
+        np.testing.assert_allclose(outs[1][0], outs[4][0], rtol=1e-5,
+                                   atol=1e-6)
+        assert abs(outs[1][1] - outs[4][1]) < 1e-5
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+                 "opt": {"step": jnp.asarray(7, jnp.int32)}}
+        ckpt.save(str(tmp_path), state, step=7)
+        restored, step = ckpt.restore(str(tmp_path), state)
+        assert step == 7
+        np.testing.assert_array_equal(restored["params"]["w"],
+                                      state["params"]["w"])
+
+    def test_latest_and_retention(self, tmp_path):
+        state = {"w": jnp.zeros((2,))}
+        for s in (1, 2, 3, 4):
+            ckpt.save(str(tmp_path), state, step=s, keep_last=2)
+        assert ckpt.latest_step(str(tmp_path)) == 4
+        dirs = sorted(d for d in os.listdir(tmp_path)
+                      if d.startswith("step_"))
+        assert dirs == ["step_00000003", "step_00000004"]
+
+    def test_corruption_detected(self, tmp_path):
+        state = {"w": jnp.zeros((128,))}
+        path = ckpt.save(str(tmp_path), state, step=1)
+        arrays = os.path.join(path, "arrays.npz")
+        with open(arrays, "r+b") as f:
+            f.seek(100)
+            f.write(b"\x13\x37")
+        with pytest.raises(IOError, match="checksum"):
+            ckpt.restore(str(tmp_path), state)
+
+    def test_async_save(self, tmp_path):
+        state = {"w": jnp.ones((4,))}
+        t = ckpt.save_async(str(tmp_path), state, step=3)
+        t.join()
+        restored, step = ckpt.restore(str(tmp_path), state)
+        assert step == 3
+
+
+class TestCompression:
+    def test_int8_roundtrip_error(self):
+        g = jax.random.normal(jax.random.key(0), (1024,))
+        q, s = compression.compress_int8(g)
+        ghat = compression.decompress_int8(q, s)
+        rel = float(jnp.linalg.norm(ghat - g) / jnp.linalg.norm(g))
+        assert rel < 0.01
+
+    def test_topk_keeps_largest(self):
+        g = jnp.asarray(np.r_[np.zeros(90), np.ones(10) * 5.0])
+        vals, idx, n = compression.compress_topk(g, 0.1)
+        ghat = compression.decompress_topk(vals, idx, n, g.shape)
+        np.testing.assert_allclose(ghat, g, atol=1e-6)
+
+    def test_error_feedback_converges(self):
+        cfg = compression.CompressionConfig(kind="topk", topk_frac=0.25)
+        ocfg = opt.OptimizerConfig(lr=0.05, warmup_steps=0,
+                                   schedule="constant", weight_decay=0,
+                                   clip_norm=0)
+        params = {"w": jnp.ones((32,)) * 3.0}
+        target = jnp.linspace(0, 1, 32)
+        residual = compression.init_residual(params)
+        state = opt.init_opt_state(params, ocfg)
+        for _ in range(300):
+            g = jax.grad(lambda p: quad_loss(p, {"target": target})[0])(params)
+            g, residual = compression.apply_compression(g, residual, cfg)
+            params, state, _ = opt.apply_update(params, g, state, ocfg)
+        err = float(jnp.abs(params["w"] - target).max())
+        assert err < 0.1, err
+
+    def test_wire_bytes_accounting(self):
+        g = {"w": jnp.zeros((1000,))}
+        none_b = compression.wire_bytes(g, compression.CompressionConfig())
+        int8_b = compression.wire_bytes(
+            g, compression.CompressionConfig(kind="int8"))
+        topk_b = compression.wire_bytes(
+            g, compression.CompressionConfig(kind="topk", topk_frac=0.01))
+        assert none_b == 4000 and int8_b < none_b / 3.5 and topk_b < int8_b
