@@ -1,0 +1,111 @@
+"""Adaptive-sampling (Read-Until) benchmarks.
+
+Two claims are measured:
+
+  bench_stream_state     stateful chunked basecalling is O(chunk) per tick:
+                         per-chunk cost vs re-running the CNN over the
+                         growing read (the naive alternative), same logits.
+  bench_adaptive         the full sense->basecall->map->decide loop:
+                         decision latency p50/p99 and fraction of raw signal
+                         saved versus the non-selective pipeline (which
+                         always sequences 100% of every molecule).
+
+Run:  PYTHONPATH=src python benchmarks/adaptive_sampling.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_stream_state():
+    from repro.core import basecaller as bc
+    cfg = bc.BasecallerConfig()
+    params = bc.init(jax.random.key(0), cfg)
+    b, chunk, n_chunks = 32, 256, 16
+    sig = jax.random.normal(jax.random.key(1), (b, chunk * n_chunks))
+
+    # stateful: every tick costs one chunk
+    state = bc.init_stream_state(cfg, b)
+    y, state = bc.apply_stream(params, state, sig[:, :chunk], cfg)  # compile
+    jax.block_until_ready(y)
+    t0 = time.perf_counter()
+    state = bc.init_stream_state(cfg, b)
+    for i in range(n_chunks):
+        y, state = bc.apply_stream(
+            params, state, sig[:, i * chunk:(i + 1) * chunk], cfg)
+    jax.block_until_ready(y)
+    t_stream = time.perf_counter() - t0
+
+    # naive: every tick re-runs the CNN over the read-so-far
+    lens = [(i + 1) * chunk for i in range(n_chunks)]
+    for t in lens:  # compile each growing shape (excluded from timing)
+        jax.block_until_ready(bc.apply(params, sig[:, :t], cfg,
+                                       padding="stream"))
+    t0 = time.perf_counter()
+    for t in lens:
+        y2 = bc.apply(params, sig[:, :t], cfg, padding="stream")
+    jax.block_until_ready(y2)
+    t_rerun = time.perf_counter() - t0
+
+    row("stream_basecall_16chunks", t_stream * 1e6,
+        f"rerun_us={t_rerun * 1e6:.0f};speedup={t_rerun / t_stream:.1f}x"
+        f";samples_per_s={b * chunk * n_chunks / t_stream:.0f}")
+
+
+def bench_adaptive():
+    from repro.data import genome as G
+    from repro.data import nanopore
+    from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
+                                PrefixMapper, SimulatedRead, TargetPanel)
+    from repro.train.micro_basecaller import DEMO_PORE as pore
+    from repro.train.micro_basecaller import train_micro_basecaller
+    cfg, params = train_micro_basecaller(150)
+    rng = np.random.default_rng(5)
+    reference = G.random_genome(rng, 30_000)
+    panel = TargetPanel.build(reference, [(0, 7_500)])
+    reads = []
+    for i in range(64):
+        start = int(rng.integers(0, len(reference) - 200))
+        sig, _ = nanopore.simulate_read(rng, reference[start: start + 200],
+                                        pore)
+        reads.append(SimulatedRead(
+            signal=nanopore.normalize(sig), read_id=i,
+            on_target=bool(panel.target_mask[start + 100]), position=start))
+    total = sum(r.total_samples for r in reads)
+    runtime = AdaptiveSamplingRuntime(
+        params, cfg, PrefixMapper(panel), PolicyConfig(),
+        channels=16, chunk_samples=160)
+    runtime.submit_all(reads)
+    t0 = time.perf_counter()
+    rep = runtime.run()
+    wall = time.perf_counter() - t0
+    row("adaptive_decision_latency", rep["decision_p50_ms"] * 1e3,
+        f"p50_ms={rep['decision_p50_ms']:.0f}"
+        f";p99_ms={rep['decision_p99_ms']:.0f}")
+    row("adaptive_signal_saved", wall * 1e6,
+        f"saved_frac={rep['signal_saved_frac']:.3f}"
+        f";nonselective_frac=0.000;total_samples={total}")
+    row("adaptive_enrichment", 0.0,
+        f"enrichment={rep.get('enrichment', 0.0):.2f}x"
+        f";ejected={rep['ejected']};accepted={rep['accepted']}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_stream_state()
+    bench_adaptive()
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,9 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
   bench_ctc              basecaller decode path tokens/s
   bench_moe_dispatch     §Perf: scatter vs one-hot-einsum dispatch FLOPs
   bench_roofline         per-cell dominant roofline term (from dry-run JSON)
+  bench_adaptive         Read-Until loop: decision latency + signal saved
+                         (see adaptive_sampling.py; stateful streaming vs
+                         re-running the CNN over the growing read)
 """
 from __future__ import annotations
 
@@ -190,6 +193,12 @@ def bench_roofline():
             f";useful_flops={rl['useful_flops_ratio']:.3f}")
 
 
+def bench_adaptive():
+    import adaptive_sampling as ad
+    ad.bench_stream_state()
+    ad.bench_adaptive()
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     bench_basecaller()
@@ -200,6 +209,7 @@ def main() -> None:
     bench_ctc()
     bench_moe_dispatch()
     bench_roofline()
+    bench_adaptive()
 
 
 if __name__ == "__main__":

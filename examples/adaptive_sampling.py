@@ -1,0 +1,95 @@
+"""Adaptive sampling (Read-Until) end-to-end: target enrichment on a
+synthetic genome.
+
+The selective-sequencing loop the SoC's real-time budget exists for: each
+channel's raw current is basecalled *statefully* chunk by chunk (conv
+overlap carried across chunks — no recompute over the growing read), the
+called prefix is mapped against a target panel with the FM-index/seed-extend
+path, and a policy decides within a few chunks whether to keep sequencing
+the molecule or eject it and free the pore.  Ejected off-target molecules
+are the win: their remaining signal is never sequenced.
+
+A micro-basecaller is trained in-process first (~30 s on CPU) so the
+squiggle->base step is real, not mocked.
+
+Run:  PYTHONPATH=src python examples/adaptive_sampling.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.data import genome as G
+from repro.data import nanopore
+from repro.realtime import (AdaptiveSamplingRuntime, Decision, PolicyConfig,
+                            PrefixMapper, SimulatedRead, TargetPanel)
+from repro.train.micro_basecaller import DEMO_PORE as PORE
+from repro.train.micro_basecaller import train_micro_basecaller
+
+
+def main():
+    rng = np.random.default_rng(11)
+    print("== training micro-basecaller on simulated squiggles ==")
+    cfg, params = train_micro_basecaller(
+        400, log=lambda i, l: print(f"  train step {i:3d} loss {l:7.3f}"))
+
+    print("\n== building reference + enrichment panel ==")
+    genome_len, read_len, n_reads = 40_000, 200, 160
+    reference = G.random_genome(rng, genome_len)
+    targets = [(2_000, 12_000)]  # enrich for 25% of the genome
+    panel = TargetPanel.build(reference, targets)
+    print(f"  reference {genome_len} bases, target fraction "
+          f"{panel.target_frac:.2f}")
+
+    print("\n== simulating a sequencing run ==")
+    reads = []
+    for i in range(n_reads):
+        start = int(rng.integers(0, genome_len - read_len))
+        sig, _ = nanopore.simulate_read(
+            rng, reference[start: start + read_len], PORE)
+        mid = start + read_len // 2
+        reads.append(SimulatedRead(
+            signal=nanopore.normalize(sig), read_id=i,
+            on_target=bool(panel.target_mask[mid]), position=start))
+    total_samples = sum(r.total_samples for r in reads)
+    print(f"  {n_reads} reads of {read_len} bases "
+          f"({total_samples} raw samples)")
+
+    print("\n== adaptive-sampling run (sense -> basecall -> map -> decide) ==")
+    policy = PolicyConfig(min_prefix_bases=32, map_prefix_bases=48,
+                          max_prefix_bases=96, min_mapq=4.0,
+                          timeout_decision=Decision.ACCEPT,
+                          eject_latency_samples=64)
+    runtime = AdaptiveSamplingRuntime(
+        params, cfg, PrefixMapper(panel), policy,
+        channels=32, chunk_samples=160)
+    runtime.submit_all(reads)
+    t0 = time.time()
+    report = runtime.run()
+    wall = time.time() - t0
+
+    print(f"  done in {wall:.1f}s ({runtime.stats.ticks} ticks)")
+    print(f"  decisions: {report['accepted']} accepted, "
+          f"{report['ejected']} ejected, {report['timeouts']} timeouts, "
+          f"{report['exhausted']} sequenced-through")
+    print(f"  decision latency p50 {report['decision_p50_ms']:.0f} ms, "
+          f"p99 {report['decision_p99_ms']:.0f} ms")
+    print(f"  signal saved: {100 * report['signal_saved_frac']:.1f}% of "
+          f"{total_samples} samples (vs 0% non-selective)")
+    print(f"  on-target fraction of sequenced signal: "
+          f"{report['on_target_frac_selective']:.2f} selective vs "
+          f"{report['on_target_frac_nonselective']:.2f} non-selective "
+          f"-> {report['enrichment']:.2f}x enrichment")
+    print(f"  on-target reads wrongly ejected: "
+          f"{100 * report['on_target_eject_rate']:.1f}%")
+
+    assert report["signal_saved_frac"] > 0.0, "no signal saved"
+    assert report["enrichment"] > 1.0, "no enrichment achieved"
+    print("\nOK — adaptive sampling saved signal and enriched the target.")
+
+
+if __name__ == "__main__":
+    main()

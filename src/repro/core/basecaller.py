@@ -80,10 +80,24 @@ def num_params(params) -> int:
     return sum(int(x.size) for x in jax.tree.leaves(params))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "padding"))
 def apply(params, signal: jax.Array, cfg: BasecallerConfig = BasecallerConfig(),
-          *, use_kernel: bool = False) -> jax.Array:
-    """signal: (B, T) or (B, T, 1) normalized current -> logits (B, T', 5)."""
+          *, use_kernel: bool = False, padding: str = "same") -> jax.Array:
+    """signal: (B, T) or (B, T, 1) normalized current -> logits (B, T', 5).
+
+    ``padding="same"`` is the offline whole-read path (centered padding).
+    ``padding="stream"`` uses K-stride rows of left padding per layer — the
+    exact whole-read reference for the chunked streaming path below: running
+    ``apply_stream`` over any chunking of the signal concatenates to this
+    output (requires T % cfg.total_stride == 0; emits T/total_stride frames).
+    """
+    if padding == "stream":
+        state = init_stream_state(cfg, signal.shape[0])
+        logits, _ = apply_stream(params, state, signal, cfg,
+                                 use_kernel=use_kernel)
+        return logits
+    if padding != "same":
+        raise ValueError(padding)
     x = signal[..., None] if signal.ndim == 2 else signal
     x = x.astype(cfg.dtype)
     n = len(cfg.kernels)
@@ -93,6 +107,55 @@ def apply(params, signal: jax.Array, cfg: BasecallerConfig = BasecallerConfig(),
         x = ops.conv1d(x, p["w"], p["b"], stride=cfg.strides[i],
                        padding="same", activation=act, use_kernel=use_kernel)
     return x
+
+
+def stream_state_spec(cfg: BasecallerConfig = BasecallerConfig()):
+    """Per-layer (carry_rows, in_channels) of the streaming state."""
+    from repro.kernels.conv1d import stream_carry_len
+
+    cins = (cfg.in_channels,) + cfg.channels[:-1]
+    return [(stream_carry_len(k, s), cin)
+            for k, s, cin in zip(cfg.kernels, cfg.strides, cins)]
+
+
+def init_stream_state(cfg: BasecallerConfig, batch: int):
+    """Zero carries for ``batch`` concurrent channel sessions.
+
+    The state is a list of (batch, K_i - stride_i, Cin_i) arrays — one per
+    conv layer — whose leading axis is the channel lane, so a single pytree
+    serves an entire sensor array and individual lanes can be reset with
+    ``state[i].at[lane].set(0)`` when a new read starts on that channel.
+    """
+    return [jnp.zeros((batch, rows, cin), cfg.dtype)
+            for rows, cin in stream_state_spec(cfg)]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def apply_stream(params, state, chunk: jax.Array,
+                 cfg: BasecallerConfig = BasecallerConfig(),
+                 *, use_kernel: bool = False):
+    """One stateful streaming step: basecall a chunk, carrying conv overlap.
+
+    chunk: (B, T) or (B, T, 1) with T % cfg.total_stride == 0.  Returns
+    (logits (B, T // total_stride, 5), new_state).  Feeding a read chunk by
+    chunk and concatenating the logits equals ``apply(..., padding="stream")``
+    over the whole read — each chunk costs O(chunk), not O(read-so-far).
+    """
+    x = chunk[..., None] if chunk.ndim == 2 else chunk
+    if x.shape[1] % cfg.total_stride:
+        raise ValueError(f"chunk length {x.shape[1]} must be a multiple of "
+                         f"total_stride={cfg.total_stride}")
+    x = x.astype(cfg.dtype)
+    n = len(cfg.kernels)
+    new_state = []
+    for i in range(n):
+        p = params[f"conv{i + 1}"]
+        act = "relu" if i < n - 1 else "none"
+        x, carry = ops.conv1d_stream(x, p["w"], p["b"], state[i],
+                                     stride=cfg.strides[i], activation=act,
+                                     use_kernel=use_kernel)
+        new_state.append(carry)
+    return x, new_state
 
 
 def output_len(cfg: BasecallerConfig, t: int) -> int:

@@ -98,14 +98,9 @@ def ctc_loss(
     return jnp.where(feasible, -ll, jnp.float32(1e6))
 
 
-def greedy_decode(logits: jax.Array, paddings: jax.Array | None = None):
-    """Collapse best-per-frame classes.  Returns (B, T) tokens with 0 padding
-    and (B,) decoded lengths; bases stay 1..4."""
-    b, t, _ = logits.shape
-    best = jnp.argmax(logits, axis=-1)  # (B, T)
-    if paddings is not None:
-        best = jnp.where(paddings > 0, BLANK, best)
-    prev = jnp.pad(best, ((0, 0), (1, 0)), constant_values=BLANK)[:, :t]
+def _collapse(best: jax.Array, prev: jax.Array):
+    """CTC collapse of per-frame classes given the preceding frame's class."""
+    b, t = best.shape
     keep = (best != BLANK) & (best != prev)
     lens = jnp.sum(keep, axis=1)
     # stable left-compaction of kept tokens
@@ -116,6 +111,40 @@ def greedy_decode(logits: jax.Array, paddings: jax.Array | None = None):
     # ensure positions >= lens are zero (max with 0 init handles collisions)
     mask = jnp.arange(t)[None, :] < lens[:, None]
     return jnp.where(mask, out, 0), lens
+
+
+def greedy_decode(logits: jax.Array, paddings: jax.Array | None = None):
+    """Collapse best-per-frame classes.  Returns (B, T) tokens with 0 padding
+    and (B,) decoded lengths; bases stay 1..4."""
+    _, t, _ = logits.shape
+    best = jnp.argmax(logits, axis=-1)  # (B, T)
+    if paddings is not None:
+        best = jnp.where(paddings > 0, BLANK, best)
+    prev = jnp.pad(best, ((0, 0), (1, 0)), constant_values=BLANK)[:, :t]
+    return _collapse(best, prev)
+
+
+def greedy_decode_stream(logits: jax.Array, prev_class: jax.Array,
+                         paddings: jax.Array | None = None):
+    """Incremental greedy decode over one streaming chunk of logits.
+
+    ``prev_class`` is the (B,) argmax class of the final frame of the
+    previous chunk (BLANK at read start) — the one-scalar-per-channel state
+    that makes the CTC collapse seamless across chunk boundaries.
+    ``paddings`` (B, T'), 1.0 where a frame is padding (e.g. basecalled from
+    zero-fill past the end of a read), forces those frames to BLANK so they
+    can never emit bases.  Returns (tokens (B, T'), lens (B,),
+    new_prev_class (B,)).  Concatenating the per-chunk tokens reproduces
+    ``greedy_decode`` on the whole read exactly.
+    """
+    _, t, _ = logits.shape
+    best = jnp.argmax(logits, axis=-1)  # (B, T)
+    if paddings is not None:
+        best = jnp.where(paddings > 0, BLANK, best)
+    prev = jnp.concatenate(
+        [prev_class.astype(best.dtype)[:, None], best[:, :t - 1]], axis=1)
+    tokens, lens = _collapse(best, prev)
+    return tokens, lens, best[:, -1]
 
 
 def viterbi_decode(logits: jax.Array, labels_like: None = None):

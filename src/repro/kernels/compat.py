@@ -1,0 +1,13 @@
+"""Pallas API compatibility across jax releases.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+this container ships 0.4.x.  Kernels import the name from here so the same
+source runs on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:  # jax < 0.5
+    CompilerParams = pltpu.TPUCompilerParams

@@ -22,7 +22,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 from repro.kernels.matmul import _ACTIVATIONS
+
+
+def stream_carry_len(ksize: int, stride: int) -> int:
+    """Input rows carried across chunk boundaries for streaming conv1d.
+
+    With a carry of exactly ``K - stride`` rows prepended to each chunk, a
+    'valid' conv over ``[carry, chunk]`` emits exactly ``T/stride`` frames
+    per chunk of ``T`` rows (T a multiple of stride) and the next carry is
+    always the trailing ``K - stride`` rows — a fixed-shape state, which is
+    what lets hundreds of channel sessions batch into one array.  A
+    zero-initialized carry makes the whole stream equivalent to a single
+    conv with ``K - stride`` rows of left padding ("stream" padding).
+    """
+    if ksize < stride:
+        raise ValueError(f"streaming conv requires K >= stride ({ksize} < {stride})")
+    return ksize - stride
 
 
 def _conv1d_kernel(x_ref, xn_ref, w_ref, bias_ref, o_ref, *, ksize: int,
@@ -101,7 +119,7 @@ def conv1d(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_t, block_n), lambda b, i, j: (b, i, j)),
         out_shape=jax.ShapeDtypeStruct((bsz, t_out, cout), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 _BIG = 2**20
 
 
@@ -125,7 +127,7 @@ def _wavefront(query, target, *, local, band, match, mismatch, gap, block_p,
             pltpu.VMEM((m + 1, block_p), jnp.int32),
             pltpu.VMEM((1, block_p), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -89,6 +89,40 @@ def conv1d(x, w, bias=None, *, stride: int = 1, padding: str = "same",
     return out[:, :t_out, :cout]
 
 
+def conv1d_stream(x, w, bias=None, carry=None, *, stride: int = 1,
+                  activation: str = "none", block_t: int = 256,
+                  block_n: int = 128, out_dtype=None, use_kernel: bool = True,
+                  interpret: Optional[bool] = None):
+    """Stateful chunked conv1d over (B, T, Cin); T % stride == 0.
+
+    ``carry`` is the (B, K-stride, Cin) tail of the preceding chunks (zeros
+    at stream start; pass None for that).  Emits exactly T/stride frames per
+    chunk and the updated carry, so a read can be convolved incrementally —
+    chunk by chunk — with output identical to one conv over the whole read
+    under "stream" (left-heavy) padding.  Cost per chunk is O(chunk), not
+    O(read-so-far).
+    """
+    ksize = w.shape[0]
+    if x.shape[1] % stride:
+        raise ValueError(f"chunk length {x.shape[1]} not a multiple of "
+                         f"stride {stride}")
+    c = _conv1d.stream_carry_len(ksize, stride)
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], c, x.shape[2]), x.dtype)
+    elif carry.shape[1] != c:
+        # a wrong-sized carry (stale state from another layer/config) would
+        # silently emit the wrong number of frames — fail loudly instead
+        raise ValueError(f"carry has {carry.shape[1]} rows, expected "
+                         f"K - stride = {c}")
+    buf = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+    y = conv1d(buf, w, bias, stride=stride, padding="valid",
+               activation=activation, block_t=block_t, block_n=block_n,
+               out_dtype=out_dtype, use_kernel=use_kernel,
+               interpret=interpret)
+    new_carry = buf[:, buf.shape[1] - c:, :]
+    return y, new_carry
+
+
 def edit_distance(query, target, *, block_p: int = 128,
                   use_kernel: bool = True, interpret: Optional[bool] = None):
     """Batched Levenshtein distance; (P, m) x (P, n) -> (P,) i32."""

@@ -226,14 +226,17 @@ def _seq_parallel_decode_attn(q, kc, vc, pos, cfg: ModelConfig, mesh,
         return jnp.moveaxis(out, 1, 2).astype(qb.dtype)   # (B, 1, H, D)
 
     seq_spec = seq_axes if len(seq_axes) > 1 else seq_axes[0]
-    return jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(batch_spec), P(batch_spec, seq_spec),
-                  P(batch_spec, seq_spec), P(batch_spec)),
-        out_specs=P(batch_spec),
-        check_vma=False,
-    )(q, kc, vc, pos)
+    in_specs = (P(batch_spec), P(batch_spec, seq_spec),
+                P(batch_spec, seq_spec), P(batch_spec))
+    out_specs = P(batch_spec)
+    if hasattr(jax, "shard_map"):  # jax >= 0.5
+        mapped = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+        mapped = _shard_map(local, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
+    return mapped(q, kc, vc, pos)
 
 
 def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos,

@@ -1,0 +1,17 @@
+"""Real-time adaptive-sampling (Read-Until) runtime.
+
+Closes the sense -> basecall -> map -> decide loop the SoC is built for:
+
+  session.py   per-channel read sessions + completed-read records
+  policy.py    ACCEPT / EJECT / WAIT decision rule + configuration
+  mapper.py    prefix mapping against a target panel (FM-index + banded DP)
+  runtime.py   batched stateful streaming runtime over a channel pool
+"""
+from repro.realtime.mapper import (MapResult, PrefixMapper,  # noqa: F401
+                                   PREFIX_ALIGN_CFG, TargetPanel)
+from repro.realtime.policy import (Decision, PolicyConfig,  # noqa: F401
+                                   decide)
+from repro.realtime.runtime import (AdaptiveSamplingRuntime,  # noqa: F401
+                                    RuntimeStats)
+from repro.realtime.session import (ChannelSession, ReadRecord,  # noqa: F401
+                                    SimulatedRead)

@@ -1,1 +1,2 @@
-"""Serving runtime: KV-cache slots, continuous batching, basecall server."""
+"""Serving runtime: KV-cache slots, continuous batching, basecall server,
+and the adaptive-sampling (Read-Until) server built on repro.realtime."""

@@ -67,6 +67,7 @@ class LMServer:
                 req = self.queue.popleft()
                 self.active[s] = req
                 # prefill: feed prompt tokens one by one (simple, exact)
+                logits = None
                 for i, tok in enumerate(req.prompt):
                     tkn = jnp.full((self.slots, 1), 0, jnp.int32).at[s, 0].set(
                         int(tok))
@@ -75,8 +76,9 @@ class LMServer:
                                                     tkn, pos)
                     self.pos[s] += 1
                 self.budget[s] = req.max_new_tokens
-                nxt = int(jnp.argmax(logits[s, -1]))
-                req.tokens_out.append(nxt)
+                if logits is not None:
+                    req.tokens_out.append(int(jnp.argmax(logits[s, -1])))
+                # empty prompt: the first decode step() seeds from token 0
 
     def step(self):
         """One decode step across all active slots."""
@@ -171,3 +173,49 @@ class BasecallServer:
             self.stats.samples += int(chunk_rows.size)
         self.stats.wall_s += time.perf_counter() - t_start
         return out
+
+
+# ----------------------------------------------------- adaptive sampling ----
+class AdaptiveSamplingServer:
+    """Read-Until serving shape beside ``BasecallServer``.
+
+    Where ``BasecallServer`` turns finished signal chunks into reads, this
+    engine serves the *selective sequencing* workload: raw reads stream in
+    per channel, the realtime runtime basecalls their prefixes statefully,
+    maps them against a target panel, and returns keep/eject decisions with
+    latency + signal-saved accounting.  Construction wires the runtime from
+    serving-level inputs (reference + target intervals).
+    """
+
+    def __init__(self, params, bc_cfg, reference, target_intervals, *,
+                 channels: int = 32, chunk: int = 256, policy=None,
+                 align_cfg=None, use_kernel: bool = False, interpret=None):
+        from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
+                                    PrefixMapper, PREFIX_ALIGN_CFG,
+                                    TargetPanel)
+        panel = TargetPanel.build(reference, target_intervals)
+        mapper = PrefixMapper(panel, align_cfg or PREFIX_ALIGN_CFG,
+                              interpret=interpret)
+        self.runtime = AdaptiveSamplingRuntime(
+            params, bc_cfg, mapper, policy or PolicyConfig(),
+            channels=channels, chunk_samples=chunk, use_kernel=use_kernel)
+
+    def submit(self, signal: np.ndarray, *, read_id: int = 0,
+               on_target: bool | None = None, position: int = -1) -> None:
+        from repro.realtime import SimulatedRead
+        self.runtime.submit(SimulatedRead(
+            signal=np.asarray(signal, np.float32), read_id=read_id,
+            on_target=on_target, position=position))
+
+    def step(self) -> bool:
+        return self.runtime.tick()
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> dict:
+        return self.runtime.run(max_ticks)
+
+    @property
+    def records(self):
+        return self.runtime.records
+
+    def summary(self) -> dict:
+        return self.runtime.report()

@@ -1,0 +1,62 @@
+"""Micro-basecaller training for demos and benchmarks.
+
+A deliberately small CNN + short CTC training run (~30 s CPU) that turns
+simulated squiggles into usable basecalls, so example/benchmark pipelines
+exercise a *real* squiggle->base step without the cost of the full
+accuracy experiment (examples/train_basecaller.py).  Shared by
+examples/adaptive_sampling.py and benchmarks/adaptive_sampling.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import basecaller as bc
+from repro.core import ctc
+from repro.data import nanopore
+from repro.train import optimizer as opt
+
+# Cheap, low-noise physics so a few hundred steps suffice.
+DEMO_PORE = nanopore.PoreModel(k=1, mean_dwell=6.0, min_dwell=4, noise=0.02,
+                               drift=0.0)
+
+DEMO_CFG = bc.BasecallerConfig(kernels=(5, 5, 3), channels=(48, 64, 5),
+                               strides=(1, 2, 2))
+
+
+def train_micro_basecaller(steps: int = 400, *,
+                           pm: nanopore.PoreModel = DEMO_PORE,
+                           cfg: bc.BasecallerConfig = DEMO_CFG,
+                           seq_len: int = 40, batch: int = 8,
+                           lr: float = 3e-3, seed: int = 0,
+                           log: Optional[Callable[[int, float], None]] = None):
+    """Returns (cfg, params) of a basecaller trained on simulated reads."""
+    params = bc.init(jax.random.key(seed), cfg)
+    ocfg = opt.OptimizerConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                               schedule="cosine", weight_decay=0.0)
+    state = opt.init_opt_state(params, ocfg)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, state, signal, spad, labels, lpad):
+        def loss_fn(p):
+            logits = bc.apply(p, signal, cfg)
+            lp = spad[:, :: cfg.total_stride][:, : logits.shape[1]]
+            return ctc.ctc_loss(logits, lp, labels, lpad).mean()
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = opt.apply_update(params, g, state, ocfg)
+        return params, state, loss
+
+    for i in range(steps):
+        b = nanopore.make_ctc_batch(rng, batch=batch, seq_len=seq_len, pm=pm)
+        params, state, loss = step(
+            params, state, jnp.asarray(b["signal"]),
+            jnp.asarray(b["signal_paddings"]), jnp.asarray(b["labels"]),
+            jnp.asarray(b["label_paddings"]))
+        if log is not None and i % 100 == 0:
+            log(i, float(loss))
+    return cfg, params

@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a dev-only dependency; the tier-1 suite must collect and
+run without it.  Importing ``given``/``settings``/``st`` from here yields the
+real API when hypothesis is installed, and stand-ins that skip just the
+property-based tests (leaving example-based tests in the same module live)
+when it is not.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategies.* call; values are never drawn."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: self
+
+    strategies = _AnyStrategy()
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = getattr(fn, "__name__", "hypothesis_test")
+            return skipper
+
+        return deco
+
+st = strategies

@@ -1,7 +1,7 @@
 """Hypothesis property tests: the ED kernel satisfies metric axioms."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 

@@ -1,6 +1,6 @@
 """FM-index: batched backward search == naive string scan (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, strategies as st
 
 from repro.core import fm_index
 

@@ -1,0 +1,70 @@
+"""CORE-side pipeline helpers: normalize_chunk, demux_reads, trim_primer."""
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.data import genome as G
+
+
+class TestNormalizeChunk:
+    def test_zero_median_unit_scale(self, rng):
+        x = rng.normal(loc=37.0, scale=5.0, size=(4, 513)).astype(np.float32)
+        out = pipeline.normalize_chunk(x)
+        assert out.dtype == np.float32
+        np.testing.assert_allclose(np.median(out, axis=-1), 0.0, atol=1e-5)
+        # MAD of the output ~ 1/1.4826 -> robust std ~ 1
+        mad = np.median(np.abs(out - np.median(out, -1, keepdims=True)), -1)
+        np.testing.assert_allclose(1.4826 * mad, 1.0, rtol=0.1)
+
+    def test_per_channel_independence(self, rng):
+        x = np.stack([rng.normal(0, 1, 256), rng.normal(100, 20, 256)])
+        out = pipeline.normalize_chunk(x.astype(np.float32))
+        ref0 = pipeline.normalize_chunk(x[:1].astype(np.float32))
+        np.testing.assert_allclose(out[0], ref0[0], atol=1e-6)
+
+    def test_constant_signal_is_finite(self):
+        out = pipeline.normalize_chunk(np.full((1, 64), 3.0, np.float32))
+        assert np.isfinite(out).all()
+        np.testing.assert_allclose(out, 0.0, atol=1e-5)
+
+
+class TestDemuxReads:
+    def test_assigns_and_rejects(self, rng):
+        barcodes = np.array([[1, 1, 2, 2, 3, 3, 4, 4],
+                             [4, 3, 2, 1, 4, 3, 2, 1],
+                             [2, 2, 2, 2, 2, 2, 2, 2]], np.int32)
+        body = rng.integers(1, 5, size=(4, 24)).astype(np.int32)
+        reads = np.concatenate([
+            np.stack([barcodes[0], barcodes[1], barcodes[2], barcodes[1]]),
+            body], axis=1)
+        # one substitution in read 3's barcode: still within max_dist
+        reads[3, 0] = (reads[3, 0] % 4) + 1
+        out = pipeline.demux_reads(reads, barcodes, max_dist=2)
+        np.testing.assert_array_equal(out, [0, 1, 2, 1])
+
+    def test_unmatched_is_minus_one(self, rng):
+        barcodes = np.array([[1, 1, 1, 1, 1, 1, 1, 1]], np.int32)
+        reads = np.concatenate([
+            np.full((2, 8), 3, np.int32),
+            rng.integers(1, 5, size=(2, 16)).astype(np.int32)], axis=1)
+        out = pipeline.demux_reads(reads, barcodes, max_dist=3)
+        np.testing.assert_array_equal(out, [-1, -1])
+
+
+class TestTrimPrimer:
+    def test_drops_leading_bases(self):
+        tokens = np.array([[1, 2, 3, 4, 1, 2, 0, 0],
+                           [4, 3, 2, 1, 0, 0, 0, 0]], np.int32)
+        lens = np.array([6, 4])
+        out, new_lens = pipeline.trim_primer(tokens, lens, primer_len=2)
+        np.testing.assert_array_equal(new_lens, [4, 2])
+        np.testing.assert_array_equal(out[0, :4], [3, 4, 1, 2])
+        np.testing.assert_array_equal(out[1, :2], [2, 1])
+        assert (out[0, 4:] == 0).all() and (out[1, 2:] == 0).all()
+
+    def test_primer_longer_than_read(self):
+        tokens = np.array([[1, 2, 3, 0]], np.int32)
+        out, new_lens = pipeline.trim_primer(tokens, np.array([3]),
+                                             primer_len=5)
+        np.testing.assert_array_equal(new_lens, [0])
+        assert (out == 0).all()

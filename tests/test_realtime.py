@@ -1,0 +1,225 @@
+"""Adaptive-sampling runtime: streaming equivalence, policy, end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import basecaller as bc
+from repro.core import ctc
+from repro.data import genome as G
+from repro.kernels import ops
+from repro.realtime import (AdaptiveSamplingRuntime, Decision, PolicyConfig,
+                            PrefixMapper, SimulatedRead, TargetPanel, decide)
+
+
+# ------------------------------------------------------- streaming convs --
+class TestStreamingConv:
+    @pytest.mark.parametrize("stride", [1, 2])
+    def test_conv1d_stream_matches_whole(self, stride):
+        k = jax.random.key(0)
+        ksize, cin, cout = 5, 8, 16
+        x = jax.random.normal(k, (2, 48, cin))
+        w = jax.random.normal(jax.random.fold_in(k, 1), (ksize, cin, cout))
+        b = jax.random.normal(jax.random.fold_in(k, 2), (cout,))
+        whole, _ = ops.conv1d_stream(x, w, b, None, stride=stride,
+                                     activation="relu", use_kernel=False)
+        carry = None
+        outs = []
+        for lo, hi in ((0, 16), (16, 20), (20, 48)):
+            y, carry = ops.conv1d_stream(x[:, lo:hi], w, b, carry,
+                                         stride=stride, activation="relu",
+                                         use_kernel=False)
+            outs.append(y)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
+                                   np.asarray(whole), atol=1e-6)
+
+    def test_conv1d_stream_kernel_path(self):
+        """Interpret-mode Pallas kernel agrees with the oracle, chunked."""
+        k = jax.random.key(3)
+        x = jax.random.normal(k, (1, 32, 8))
+        w = jax.random.normal(jax.random.fold_in(k, 1), (3, 8, 128))
+        ref_y, _ = ops.conv1d_stream(x, w, None, None, stride=2,
+                                     use_kernel=False)
+        carry = None
+        outs = []
+        for lo, hi in ((0, 16), (16, 32)):
+            y, carry = ops.conv1d_stream(x[:, lo:hi], w, None, carry,
+                                         stride=2, use_kernel=True,
+                                         interpret=True)
+            outs.append(y)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
+                                   np.asarray(ref_y), atol=1e-5)
+
+    def test_rejects_misaligned_chunk(self):
+        x = jnp.zeros((1, 33, 4))
+        w = jnp.zeros((5, 4, 8))
+        with pytest.raises(ValueError):
+            ops.conv1d_stream(x, w, None, None, stride=2)
+
+
+class TestStatefulBasecaller:
+    def test_chunked_matches_whole_read(self):
+        """The acceptance property: chunked logits == whole-read logits."""
+        cfg = bc.BasecallerConfig()
+        params = bc.init(jax.random.key(0), cfg)
+        sig = jax.random.normal(jax.random.key(1), (3, 256))
+        whole = bc.apply(params, sig, cfg, padding="stream")
+        assert whole.shape == (3, 256 // cfg.total_stride, 5)
+
+        state = bc.init_stream_state(cfg, 3)
+        outs = []
+        for lo, hi in ((0, 64), (64, 68), (68, 168), (168, 256)):
+            y, state = bc.apply_stream(params, state, sig[:, lo:hi], cfg)
+            assert y.shape[1] == (hi - lo) // cfg.total_stride
+            outs.append(y)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate(outs, axis=1)), np.asarray(whole),
+            atol=1e-5)
+
+    def test_lane_reset_equals_fresh_stream(self):
+        cfg = bc.BasecallerConfig(kernels=(5, 3), channels=(16, 5),
+                                  strides=(1, 2))
+        params = bc.init(jax.random.key(0), cfg)
+        sig = jax.random.normal(jax.random.key(1), (2, 64))
+        # pollute lane 0 with unrelated signal, then reset it
+        state = bc.init_stream_state(cfg, 2)
+        _, state = bc.apply_stream(params, state,
+                                   jax.random.normal(jax.random.key(2),
+                                                     (2, 32)), cfg)
+        state = [s.at[jnp.asarray([0])].set(0) for s in state]
+        y, _ = bc.apply_stream(params, state, sig, cfg)
+        fresh, _ = bc.apply_stream(params, bc.init_stream_state(cfg, 2), sig,
+                                   cfg)
+        np.testing.assert_allclose(np.asarray(y[0]), np.asarray(fresh[0]),
+                                   atol=1e-6)
+
+    def test_state_spec_shapes(self):
+        cfg = bc.BasecallerConfig()
+        state = bc.init_stream_state(cfg, 7)
+        assert len(state) == len(cfg.kernels)
+        for s, (rows, cin) in zip(state, bc.stream_state_spec(cfg)):
+            assert s.shape == (7, rows, cin)
+
+
+class TestStreamingCTC:
+    def test_stream_decode_matches_whole(self):
+        logits = jax.random.normal(jax.random.key(0), (4, 60, 5))
+        tok_w, len_w = ctc.greedy_decode(logits)
+        prev = jnp.full((4,), ctc.BLANK, jnp.int32)
+        got = [[] for _ in range(4)]
+        for lo, hi in ((0, 13), (13, 14), (14, 40), (40, 60)):
+            tk, ln, prev = ctc.greedy_decode_stream(logits[:, lo:hi], prev)
+            for b in range(4):
+                got[b].extend(np.asarray(tk[b][: int(ln[b])]).tolist())
+        for b in range(4):
+            want = np.asarray(tok_w[b][: int(len_w[b])]).tolist()
+            assert got[b] == want
+
+    def test_stream_decode_padded_frames_emit_nothing(self):
+        # strongly non-blank logits everywhere, but the tail is padding
+        logits = jnp.zeros((2, 10, 5)).at[:, :, 2].set(10.0)
+        pads = jnp.zeros((2, 10)).at[:, 6:].set(1.0)
+        prev = jnp.full((2,), ctc.BLANK, jnp.int32)
+        tk, ln, new_prev = ctc.greedy_decode_stream(logits, prev, pads)
+        # frames 0..5 collapse to one 'C'; padded frames add nothing
+        assert ln.tolist() == [1, 1]
+        assert tk[:, 0].tolist() == [2, 2]
+        # padded tail resets the carry to BLANK for the next read
+        assert new_prev.tolist() == [ctc.BLANK, ctc.BLANK]
+
+
+# ----------------------------------------------------------- policy/maps --
+class TestPolicy:
+    def test_decision_rules(self):
+        cfg = PolicyConfig(min_mapq=4.0, max_prefix_bases=100)
+        mapped = np.array([True, True, True, False, False])
+        on_target = np.array([True, False, False, False, False])
+        mapq = np.array([0.0, 10.0, 1.0, 0.0, 0.0])
+        plen = np.array([50, 50, 50, 50, 120])
+        decisions, reasons = decide(mapped, on_target, mapq, plen, cfg)
+        assert decisions[0] is Decision.ACCEPT      # on-target
+        assert decisions[1] is Decision.EJECT       # confident off-target
+        assert decisions[2] is Decision.WAIT        # low-confidence eject
+        assert decisions[3] is Decision.WAIT        # unmapped, patience left
+        assert decisions[4] is cfg.timeout_decision  # out of patience
+        assert reasons[4] == "timeout" and reasons[1] == "mapped"
+
+    def test_panel_mask(self):
+        panel = TargetPanel.build(np.ones(100, np.int32),
+                                  [(10, 20), (90, 200)])
+        assert panel.target_mask[10] and panel.target_mask[19]
+        assert not panel.target_mask[20] and panel.target_mask[99]
+        assert panel.intervals == ((10, 20), (90, 100))
+        assert 0.19 < panel.target_frac < 0.21
+
+
+class TestPrefixMapper:
+    def test_exact_prefixes_classified(self, rng):
+        ref = G.random_genome(rng, 6_000)
+        panel = TargetPanel.build(ref, [(0, 3_000)])
+        mapper = PrefixMapper(panel)
+        L = 48
+        starts = [100, 1_500, 3_500, 5_000]
+        prefixes = np.stack([ref[s: s + L] for s in starts])
+        res = mapper.map_prefixes(prefixes)
+        assert res.mapped.all()
+        np.testing.assert_array_equal(res.on_target,
+                                      [True, True, False, False])
+        for s, p in zip(starts, res.positions):
+            assert abs(int(p) - s) <= 16
+
+
+# ------------------------------------------------------------- runtime ----
+class TestRuntime:
+    def _runtime(self, rng, timeout_decision):
+        cfg = bc.BasecallerConfig(kernels=(5, 3), channels=(16, 5),
+                                  strides=(1, 2))
+        params = bc.init(jax.random.key(0), cfg)
+        ref = G.random_genome(rng, 4_000)
+        panel = TargetPanel.build(ref, [(0, 1_000)])
+        policy = PolicyConfig(min_prefix_bases=16, map_prefix_bases=24,
+                              max_prefix_bases=48,
+                              timeout_decision=timeout_decision,
+                              eject_latency_samples=32)
+        return AdaptiveSamplingRuntime(
+            params, cfg, PrefixMapper(panel), policy, channels=4,
+            chunk_samples=128), rng
+
+    def test_every_read_resolves(self, rng):
+        runtime, rng = self._runtime(rng, Decision.ACCEPT)
+        reads = [SimulatedRead(
+            signal=rng.normal(size=600).astype(np.float32), read_id=i,
+            on_target=bool(i % 2)) for i in range(10)]
+        runtime.submit_all(reads)
+        report = runtime.run(max_ticks=500)
+        assert report["reads"] == 10
+        assert len(runtime.records) == 10
+        for rec in runtime.records:
+            assert 0 < rec.samples_sequenced <= rec.total_samples
+            assert rec.samples_saved == rec.total_samples - rec.samples_sequenced
+            assert rec.reason in ("mapped", "timeout", "exhausted")
+        assert 0.0 <= report["signal_saved_frac"] <= 1.0
+        assert report["decision_p99_ms"] >= report["decision_p50_ms"]
+
+    def test_eject_saves_signal(self, rng):
+        """With an eject-on-timeout policy every undecidable read saves
+        signal — exercises the eject bookkeeping deterministically."""
+        runtime, rng = self._runtime(rng, Decision.EJECT)
+        runtime.submit_all([
+            SimulatedRead(signal=rng.normal(size=900).astype(np.float32),
+                          read_id=i) for i in range(6)])
+        report = runtime.run(max_ticks=500)
+        assert report["ejected"] + report["timeouts"] + report["accepted"] \
+            + report["exhausted"] == 6
+        assert report["signal_saved_frac"] > 0.0
+        assert runtime.stats.samples_saved + runtime.stats.samples_sequenced \
+            == 6 * 900
+
+    def test_rejects_misaligned_chunk_size(self, rng):
+        cfg = bc.BasecallerConfig()
+        params = bc.init(jax.random.key(0), cfg)
+        panel = TargetPanel.build(G.random_genome(rng, 1_000), [(0, 100)])
+        with pytest.raises(ValueError):
+            AdaptiveSamplingRuntime(params, cfg, PrefixMapper(panel),
+                                    PolicyConfig(), channels=2,
+                                    chunk_samples=130)

@@ -6,7 +6,8 @@ import pytest
 
 from repro.configs import ARCHS
 from repro.models.registry import get_model
-from repro.serving.engine import BasecallServer, LMServer, Request
+from repro.serving.engine import (AdaptiveSamplingServer, BasecallServer,
+                                  LMServer, Request)
 
 
 @pytest.fixture(scope="module")
@@ -44,6 +45,18 @@ class TestLMServer:
         # 4 requests x 3 tokens on 2 slots can't be fully sequential
         assert steps < 4 * 6
 
+    def test_empty_prompt_does_not_crash(self, lm):
+        """Regression: empty prompt used to hit an unbound ``logits``."""
+        model, params, cfg = lm
+        srv = LMServer(model, params, cfg, slots=2, max_len=16)
+        srv.submit(Request(uid=0, prompt=np.zeros(0, np.int32),
+                           max_new_tokens=3))
+        srv.submit(Request(uid=1, prompt=np.array([1, 2]), max_new_tokens=3))
+        srv.run_until_drained()
+        assert len(srv.finished) == 2
+        empty = next(r for r in srv.finished if r.uid == 0)
+        assert len(empty.tokens_out) >= 3
+
 
 class TestBasecallServer:
     def test_latency_and_throughput_accounting(self):
@@ -59,3 +72,24 @@ class TestBasecallServer:
         s = srv.stats.summary()
         assert s["p99_ms"] >= s["p50_ms"] > 0
         assert srv.stats.samples == 8 * 512
+
+
+class TestAdaptiveSamplingServer:
+    def test_serves_reads_with_decisions(self):
+        from repro.core import basecaller as bc
+        from repro.data import genome as G
+        cfg = bc.BasecallerConfig(kernels=(5, 3), channels=(16, 5),
+                                  strides=(1, 2))
+        params = bc.init(jax.random.key(0), cfg)
+        rng = np.random.default_rng(3)
+        reference = G.random_genome(rng, 3_000)
+        srv = AdaptiveSamplingServer(params, cfg, reference, [(0, 1_000)],
+                                     channels=4, chunk=128)
+        for i in range(6):
+            srv.submit(rng.normal(size=700).astype(np.float32), read_id=i,
+                       on_target=bool(i % 2))
+        summary = srv.run_until_drained(max_ticks=500)
+        assert summary["reads"] == 6
+        assert len(srv.records) == 6
+        assert summary["decision_p99_ms"] >= summary["decision_p50_ms"] >= 0
+        assert 0.0 <= summary["signal_saved_frac"] <= 1.0
