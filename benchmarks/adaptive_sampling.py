@@ -64,16 +64,21 @@ def bench_stream_state():
 
 
 def bench_adaptive():
+    import repro.engine as engine_api
     from repro.data import genome as G
     from repro.data import nanopore
-    from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
-                                PrefixMapper, SimulatedRead, TargetPanel)
+    from repro.realtime import SimulatedRead
     from repro.train.micro_basecaller import DEMO_PORE as pore
     from repro.train.micro_basecaller import train_micro_basecaller
     cfg, params = train_micro_basecaller(150)
     rng = np.random.default_rng(5)
     reference = G.random_genome(rng, 30_000)
-    panel = TargetPanel.build(reference, [(0, 7_500)])
+    eng = engine_api.build("adaptive_sampling", params=params, cfg=cfg,
+                           reference=reference, targets=[(0, 7_500)],
+                           channels=16, chunk=160)
+    # ground-truth labels come from the engine's own panel, so the bench
+    # can't silently diverge from the enrichment targets
+    target_mask = eng.panel.target_mask
     reads = []
     for i in range(64):
         start = int(rng.integers(0, len(reference) - 200))
@@ -81,14 +86,11 @@ def bench_adaptive():
                                         pore)
         reads.append(SimulatedRead(
             signal=nanopore.normalize(sig), read_id=i,
-            on_target=bool(panel.target_mask[start + 100]), position=start))
+            on_target=bool(target_mask[start + 100]), position=start))
     total = sum(r.total_samples for r in reads)
-    runtime = AdaptiveSamplingRuntime(
-        params, cfg, PrefixMapper(panel), PolicyConfig(),
-        channels=16, chunk_samples=160)
-    runtime.submit_all(reads)
+    eng.submit_all(reads)
     t0 = time.perf_counter()
-    rep = runtime.run()
+    rep = eng.drain()
     wall = time.perf_counter() - t0
     row("adaptive_decision_latency", rep["decision_p50_ms"] * 1e3,
         f"p50_ms={rep['decision_p50_ms']:.0f}"

@@ -18,9 +18,13 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
@@ -125,21 +129,23 @@ def bench_variant_caller():
 
 
 def bench_pipeline():
+    import repro.engine as engine_api
     from repro.core import basecaller as bc
-    from repro.core.pipeline import StreamingBasecallPipeline
     from repro.data.nanopore import PoreModel, raw_bitrate_bps
     cfg = bc.BasecallerConfig()
     params = bc.init(jax.random.key(0), cfg)
-    pipe = StreamingBasecallPipeline(params, cfg)
+    eng = engine_api.build("pathogen_pipeline", params=params, cfg=cfg)
     rng = np.random.default_rng(2)
     chunks = [rng.normal(size=(32, 2048)).astype(np.float32)
               for _ in range(4)]
     t0 = time.perf_counter()
-    outs = list(pipe.run(iter(chunks)))
+    for chunk in chunks:
+        eng.submit(chunk)
+    eng.drain()
     us = (time.perf_counter() - t0) * 1e6
     ingest = raw_bitrate_bps(PoreModel(), channels=512)
     row("stream_pipeline_4x32x2048", us,
-        f"samples_per_s={pipe.stats.samples_in / (us / 1e6):.0f}")
+        f"samples_per_s={eng.telemetry.samples / (us / 1e6):.0f}")
     row("sensor_ingest", 0.0,
         f"Mbps={ingest / 1e6:.1f};vs_audio={ingest / 256e3:.0f}x;paper>100x")
 
@@ -200,6 +206,15 @@ def bench_adaptive():
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset (skips the adaptive-sampling bench, "
+                         "which trains a micro-basecaller)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON (e.g. BENCH_smoke.json) "
+                         "for perf-trajectory tracking")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     bench_basecaller()
     bench_edit_distance()
@@ -209,7 +224,14 @@ def main() -> None:
     bench_ctc()
     bench_moe_dispatch()
     bench_roofline()
-    bench_adaptive()
+    if not args.smoke:
+        bench_adaptive()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": us, "derived": d}
+                       for n, us, d in ROWS], f, indent=2)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -22,10 +22,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+import repro.engine as engine_api
 from repro.data import genome as G
 from repro.data import nanopore
-from repro.realtime import (AdaptiveSamplingRuntime, Decision, PolicyConfig,
-                            PrefixMapper, SimulatedRead, TargetPanel)
+from repro.realtime import Decision, PolicyConfig, SimulatedRead
 from repro.train.micro_basecaller import DEMO_PORE as PORE
 from repro.train.micro_basecaller import train_micro_basecaller
 
@@ -36,13 +36,19 @@ def main():
     cfg, params = train_micro_basecaller(
         400, log=lambda i, l: print(f"  train step {i:3d} loss {l:7.3f}"))
 
-    print("\n== building reference + enrichment panel ==")
+    print("\n== building reference + enrichment engine ==")
     genome_len, read_len, n_reads = 40_000, 200, 160
     reference = G.random_genome(rng, genome_len)
     targets = [(2_000, 12_000)]  # enrich for 25% of the genome
-    panel = TargetPanel.build(reference, targets)
+    policy = PolicyConfig(min_prefix_bases=32, map_prefix_bases=48,
+                          max_prefix_bases=96, min_mapq=4.0,
+                          timeout_decision=Decision.ACCEPT,
+                          eject_latency_samples=64)
+    engine = engine_api.build(
+        "adaptive_sampling", params=params, cfg=cfg, reference=reference,
+        targets=targets, policy=policy, channels=32, chunk=160)
     print(f"  reference {genome_len} bases, target fraction "
-          f"{panel.target_frac:.2f}")
+          f"{engine.panel.target_frac:.2f}")
 
     print("\n== simulating a sequencing run ==")
     reads = []
@@ -53,25 +59,18 @@ def main():
         mid = start + read_len // 2
         reads.append(SimulatedRead(
             signal=nanopore.normalize(sig), read_id=i,
-            on_target=bool(panel.target_mask[mid]), position=start))
+            on_target=bool(engine.panel.target_mask[mid]), position=start))
     total_samples = sum(r.total_samples for r in reads)
     print(f"  {n_reads} reads of {read_len} bases "
           f"({total_samples} raw samples)")
 
     print("\n== adaptive-sampling run (sense -> basecall -> map -> decide) ==")
-    policy = PolicyConfig(min_prefix_bases=32, map_prefix_bases=48,
-                          max_prefix_bases=96, min_mapq=4.0,
-                          timeout_decision=Decision.ACCEPT,
-                          eject_latency_samples=64)
-    runtime = AdaptiveSamplingRuntime(
-        params, cfg, PrefixMapper(panel), policy,
-        channels=32, chunk_samples=160)
-    runtime.submit_all(reads)
+    engine.submit_all(reads)
     t0 = time.time()
-    report = runtime.run()
+    report = engine.drain()
     wall = time.time() - t0
 
-    print(f"  done in {wall:.1f}s ({runtime.stats.ticks} ticks)")
+    print(f"  done in {wall:.1f}s ({engine.telemetry.steps} ticks)")
     print(f"  decisions: {report['accepted']} accepted, "
           f"{report['ejected']} ejected, {report['timeouts']} timeouts, "
           f"{report['exhausted']} sequenced-through")

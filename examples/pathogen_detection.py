@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.engine as engine_api
 from repro.core import basecaller as bc
-from repro.core import ctc, pathogen, pipeline
+from repro.core import ctc, pathogen
 from repro.data import genome as G
 from repro.data import nanopore
 from repro.train import optimizer as opt
@@ -88,24 +89,21 @@ def main():
                 rows.append(np.resize(sig, 280))
             yield np.stack(rows)
 
-    pipe = pipeline.StreamingBasecallPipeline(params, cfg)
-    reads = []
+    engine = engine_api.build(
+        "pathogen_pipeline", params=params, cfg=cfg, panel=panel,
+        detect_cfg=pathogen.DetectConfig(window=96, min_read_frac=0.45,
+                                         min_reads=10))
     t0 = time.time()
-    for tokens, lens in pipe.run(chunk_stream()):
-        for i in range(len(tokens)):
-            called = tokens[i][: int(lens[i])][:40]
-            reads.append(np.pad(called, (0, 40 - len(called))))
+    for chunk in chunk_stream():
+        engine.submit(chunk)
+    engine.drain()
     wall = time.time() - t0
-    reads = np.stack(reads).astype(np.int32)
-    print(f"  basecalled {pipe.stats.bases_called} bases from "
-          f"{pipe.stats.samples_in} samples in {wall:.1f}s "
-          f"({pipe.stats.bases_called / wall:.0f} bases/s host)")
+    tel = engine.telemetry
+    print(f"  basecalled {tel.bases} bases from {tel.samples} samples "
+          f"in {wall:.1f}s ({tel.bases / wall:.0f} bases/s host)")
 
     print("\n== ED-engine panel comparison ==")
-    rep = pathogen.detect(
-        panel, reads,
-        pathogen.DetectConfig(window=96, min_read_frac=0.45, min_reads=10),
-        mode="ed")
+    rep = engine.detect(read_len=40)
     for name in panel.names:
         mark = "DETECTED" if rep.present[name] else "absent"
         print(f"  {name:12s} reads={rep.counts[name]:3d} "

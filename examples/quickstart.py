@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.engine as engine_api
 from repro.core import basecaller as bc
 from repro.core import ctc, pathogen
 from repro.data import genome as G
@@ -37,12 +38,13 @@ def main():
     print("\n== 2. basecall (paper's 6-layer CNN, untrained weights) ==")
     cfg = bc.BasecallerConfig()
     params = bc.init(jax.random.key(0), cfg)
-    logits = bc.apply(params, jnp.asarray(signal[None]), cfg)
-    tokens, lens = ctc.greedy_decode(logits)
+    engine = engine_api.build("basecall", params=params, cfg=cfg,
+                              batch=1, chunk=len(signal))
+    reads = engine.serve(signal[None])
     print(f"params: {bc.num_params(params):,} "
           f"(paper: ~450K; two-layer share {bc.weight_concentration(params):.0%})")
-    print(f"called {int(lens[0])} bases (untrained, so random-ish): "
-          f"{ctc.tokens_to_str(np.asarray(tokens[0]), int(lens[0]))[:40]}...")
+    print(f"called {len(reads[0])} bases (untrained, so random-ish): "
+          f"{ctc.tokens_to_str(reads[0])[:40]}...")
 
     print("\n== 3. pathogen detection on the ED engine ==")
     panel = pathogen.Panel.build({

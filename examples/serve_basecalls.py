@@ -1,9 +1,10 @@
-"""Serving example: batched basecall server + continuous-batching LM server.
+"""Serving example: the unified engine API over two workloads.
 
-  part 1 — BasecallServer: raw chunks in, reads out, p50/p99 latency and
-           bases/s (the paper's real-time constraint, measured),
-  part 2 — LMServer: the assigned-arch serving path (slot-based continuous
-           batching over a KV cache) on a smoke config.
+  part 1 — build("basecall"): raw chunks in, reads out, per-dispatch
+           p50/p99 latency and bases/s (the paper's real-time constraint,
+           measured),
+  part 2 — build("lm_decode"): the assigned-arch serving path (slot-based
+           continuous batching over a KV cache) on a smoke config.
 
 Run:  PYTHONPATH=src python examples/serve_basecalls.py
 """
@@ -15,38 +16,36 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.configs import ARCHS
+import repro.engine as engine_api
 from repro.core import basecaller as bc
-from repro.models.registry import get_model
-from repro.serving.engine import BasecallServer, LMServer, Request
+from repro.engine.lm import Request
 
 
 def main():
     print("== 1. basecall serving ==")
     cfg = bc.BasecallerConfig()
     params = bc.init(jax.random.key(0), cfg)
-    srv = BasecallServer(params, cfg, batch=16, chunk=2048)
+    eng = engine_api.build("basecall", params=params, cfg=cfg,
+                           batch=16, chunk=2048)
     rng = np.random.default_rng(0)
     chunks = rng.normal(size=(64, 2048)).astype(np.float32)
-    reads = srv.serve(chunks)
-    s = srv.stats.summary()
-    print(f"  served {len(reads)} chunks: p50={s['p50_ms']:.1f}ms "
-          f"p99={s['p99_ms']:.1f}ms  {s['bases_per_s']:.0f} bases/s "
-          f"{s['samples_per_s']:.0f} samples/s")
+    reads = eng.serve(chunks)
+    s = eng.summary()
+    print(f"  served {len(reads)} chunks in {s['dispatches']} dispatches: "
+          f"p50={s['p50_ms']:.1f}ms p99={s['p99_ms']:.1f}ms  "
+          f"{s['bases_per_s']:.0f} bases/s {s['samples_per_s']:.0f} samples/s")
 
     print("\n== 2. LM continuous batching (qwen3 smoke config) ==")
-    lcfg = ARCHS["qwen3-4b"].smoke_config()
-    model = get_model(lcfg)
-    lparams, _ = model.init(jax.random.key(1), lcfg)
-    lm = LMServer(model, lparams, lcfg, slots=4, max_len=48)
+    lm = engine_api.build("lm_decode", arch="qwen3-4b", smoke=True,
+                          slots=4, max_len=48)
     for uid in range(10):
         lm.submit(Request(uid=uid,
-                          prompt=rng.integers(1, lcfg.vocab_size, 4),
+                          prompt=rng.integers(1, lm.cfg.vocab_size, 4),
                           max_new_tokens=8))
-    steps = lm.run_until_drained()
-    lat = [r.done_at - r.submitted_at for r in lm.finished]
-    print(f"  {len(lm.finished)} requests on 4 slots in {steps} decode "
-          f"steps; mean latency {np.mean(lat) * 1e3:.0f}ms")
+    s = lm.drain()
+    print(f"  {s['completed']} requests on 4 slots in {s['steps']} decode "
+          f"steps; p50 latency {s['p50_ms']:.0f}ms, "
+          f"{s['tokens_per_s']:.0f} tok/s host")
     print("\nOK")
 
 

@@ -13,23 +13,20 @@ parallel with accelerator jobs*.  The TPU analogue:
     analogue of "if sufficient scratchpad memories are committed to MAT and
     ED".
 
-The pipeline is the end-to-end path used by examples/pathogen_detection.py:
-raw squiggle chunks -> normalize -> basecall -> CTC decode -> demux ->
-classify.
+The CORE-side helpers (normalize / demux / trim) live here; the streaming
+pipeline itself is ``repro.engine.build("pathogen_pipeline", ...)`` —
+``StreamingBasecallPipeline`` remains as a deprecation shim over it.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
-import time
+import warnings
 from typing import Callable, Iterable, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import basecaller as bc
-from repro.core import ctc
 from repro.kernels import ops
 
 
@@ -69,16 +66,23 @@ def demux_reads(reads: np.ndarray, barcodes: np.ndarray, *,
 
 
 def trim_primer(tokens: np.ndarray, lens: np.ndarray, primer_len: int):
-    """Drop the first ``primer_len`` bases (CORE-side editing)."""
-    out = np.zeros_like(tokens)
+    """Drop the first ``primer_len`` bases (CORE-side editing).
+
+    Vectorized gather: every row reads ``tokens[i, j + primer_len]`` shifted
+    to column ``j``, masked to the trimmed length (no per-read Python loop).
+    """
+    lens = np.asarray(lens)
     new_lens = np.maximum(lens - primer_len, 0)
-    for i in range(tokens.shape[0]):
-        out[i, : new_lens[i]] = tokens[i, primer_len: lens[i]]
+    width = tokens.shape[1]
+    src = np.minimum(np.arange(width) + primer_len, width - 1)
+    mask = np.arange(width)[None, :] < new_lens[:, None]
+    out = np.where(mask, tokens[:, src], 0).astype(tokens.dtype)
     return out, new_lens
 
 
 @dataclasses.dataclass
 class PipelineStats:
+    """Deprecated stats shape, populated from the unified ``Telemetry``."""
     chunks: int = 0
     device_dispatches: int = 0
     bases_called: int = 0
@@ -90,49 +94,51 @@ class PipelineStats:
 
 
 class StreamingBasecallPipeline:
-    """Double-buffered basecall pipeline over an iterator of raw chunks."""
+    """Deprecated: ``repro.engine.build("pathogen_pipeline", ...)``.
 
-    def __init__(self, params, cfg: bc.BasecallerConfig = bc.BasecallerConfig(),
-                 pipe_cfg: PipelineConfig = PipelineConfig(),
+    Thin shim preserving the old generator API (``run`` yields
+    ``(tokens, lens)`` per chunk, host decode of job k overlapping device
+    compute of job k+1) over the unified engine.
+    """
+
+    def __init__(self, params, cfg=None, pipe_cfg: PipelineConfig = PipelineConfig(),
                  *, use_kernel: bool = False):
-        self.params = params
-        self.cfg = cfg
+        warnings.warn(
+            "StreamingBasecallPipeline is deprecated; use "
+            'repro.engine.build("pathogen_pipeline") instead',
+            DeprecationWarning, stacklevel=2)
+        import repro.engine as engine_api
+        from repro.core import basecaller as bc
+        cfg = cfg if cfg is not None else bc.BasecallerConfig()
         self.pipe_cfg = pipe_cfg
-        self.use_kernel = use_kernel
-        self.stats = PipelineStats()
+        self._eng = engine_api.build("pathogen_pipeline", params=params,
+                                     cfg=cfg, depth=pipe_cfg.depth,
+                                     use_kernel=use_kernel)
 
-    def _dispatch(self, chunk: np.ndarray) -> jax.Array:
-        sig = jnp.asarray(normalize_chunk(chunk))
-        logits = bc.apply(self.params, sig, self.cfg,
-                          use_kernel=self.use_kernel)
-        self.stats.device_dispatches += 1
-        return logits  # async: device still computing
+    @property
+    def stats(self) -> PipelineStats:
+        tel = self._eng.telemetry
+        return PipelineStats(
+            chunks=tel.counters.get("chunks", 0),
+            device_dispatches=tel.dispatches, bases_called=tel.bases,
+            samples_in=tel.samples, wall_s=tel.wall_s)
 
     def run(self, chunks: Iterable[np.ndarray],
             on_read: Callable[[np.ndarray, np.ndarray], None] | None = None
             ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
         """chunks: iterator of (channels, chunk_samples) raw signal arrays.
 
-        Yields (tokens (B, T'), lens (B,)) per chunk.  Host decode of job k
-        overlaps with device compute of job k+1 (the CORE/MAT split).
-        """
-        t0 = time.perf_counter()
-        queue: collections.deque = collections.deque()
+        Yields (tokens (B, T'), lens (B,)) per chunk."""
+        eng = self._eng
         for chunk in chunks:
-            self.stats.chunks += 1
-            self.stats.samples_in += chunk.size
-            queue.append(self._dispatch(chunk))
-            while len(queue) > self.pipe_cfg.depth:
-                yield self._drain_one(queue, on_read)
-        while queue:
-            yield self._drain_one(queue, on_read)
-        self.stats.wall_s = time.perf_counter() - t0
+            eng.submit(chunk)
+            while eng.outputs:
+                yield self._emit(on_read)
+        while eng.step():
+            yield self._emit(on_read)
 
-    def _drain_one(self, queue, on_read):
-        logits = queue.popleft()
-        tokens, lens = ctc.greedy_decode(logits)
-        tokens_np, lens_np = np.asarray(tokens), np.asarray(lens)
-        self.stats.bases_called += int(lens_np.sum())
+    def _emit(self, on_read):
+        tokens_np, lens_np = self._eng.outputs.popleft()
         if on_read is not None:
             on_read(tokens_np, lens_np)
         return tokens_np, lens_np

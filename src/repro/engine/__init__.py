@@ -1,0 +1,31 @@
+"""The unified SoC engine API — one scheduler, one telemetry surface, one
+entrypoint for every streaming workload.
+
+    import repro.engine
+
+    eng = repro.engine.build("basecall", preset="smoke")   # or "lm_decode",
+    eng.submit(chunks)                                     # "adaptive_sampling",
+    report = eng.drain()                                   # "pathogen_pipeline"
+    print(report["p50_ms"], report["bases_per_s"])
+
+Pieces (each its own module; workload modules import lazily):
+
+  base.py       ``Engine`` protocol (submit / step / drain / telemetry)
+                + ``EngineBase`` plumbing
+  scheduler.py  ``SlotScheduler`` — fixed-shape admission, slot recycling,
+                bounded in-flight depth (shared by all engines)
+  telemetry.py  ``Telemetry`` — weighted latency percentiles, throughput,
+                signal saved, per-stage wall time, workload counters
+  registry.py   ``build(workload, preset, **overrides)`` + ``register``
+  lm.py / basecall.py / adaptive.py / pipeline.py — the four workloads
+
+The legacy surfaces (``LMServer``, ``BasecallServer``,
+``AdaptiveSamplingServer``, ``StreamingBasecallPipeline``) are deprecation
+shims over these engines; new workloads register here instead of adding a
+fifth one-off server.
+"""
+from repro.engine.base import Engine, EngineBase  # noqa: F401
+from repro.engine.registry import (build, presets, register,  # noqa: F401
+                                   workloads)
+from repro.engine.scheduler import SlotScheduler  # noqa: F401
+from repro.engine.telemetry import Telemetry, weighted_percentile  # noqa: F401

@@ -1,0 +1,97 @@
+"""Adaptive-sampling engine: the Read-Until loop behind the unified API.
+
+Wires the :class:`repro.realtime.AdaptiveSamplingRuntime` (channel-lane
+scheduling + stateful streaming basecalls + prefix mapping + policy) from
+serving-level inputs — a reference genome and target intervals — and
+exposes it through the ``Engine`` protocol.  ``submit`` accepts either a
+raw signal array or a :class:`repro.realtime.SimulatedRead`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.registry import register
+
+
+class AdaptiveSamplingEngine:
+    """Read-Until serving shape: keep/eject decisions with latency +
+    signal-saved accounting."""
+
+    workload = "adaptive_sampling"
+
+    def __init__(self, params, bc_cfg, reference, target_intervals, *,
+                 channels: int = 32, chunk: int = 256, policy=None,
+                 align_cfg=None, use_kernel: bool = False, interpret=None):
+        from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
+                                    PrefixMapper, PREFIX_ALIGN_CFG,
+                                    TargetPanel)
+        self.panel = TargetPanel.build(reference, target_intervals)
+        mapper = PrefixMapper(self.panel, align_cfg or PREFIX_ALIGN_CFG,
+                              interpret=interpret)
+        self.runtime = AdaptiveSamplingRuntime(
+            params, bc_cfg, mapper, policy or PolicyConfig(),
+            channels=channels, chunk_samples=chunk, use_kernel=use_kernel)
+
+    @property
+    def telemetry(self):
+        return self.runtime.telemetry
+
+    @property
+    def scheduler(self):
+        return self.runtime.scheduler
+
+    @property
+    def records(self):
+        return self.runtime.records
+
+    def submit(self, signal, *, read_id: int = 0, on_target: bool | None = None,
+               position: int = -1, **_) -> None:
+        from repro.realtime import SimulatedRead
+        if isinstance(signal, SimulatedRead):
+            self.runtime.submit(signal)
+            return
+        self.runtime.submit(SimulatedRead(
+            signal=np.asarray(signal, np.float32), read_id=read_id,
+            on_target=on_target, position=position))
+
+    def submit_all(self, reads) -> None:
+        for r in reads:
+            self.submit(r)
+
+    def step(self) -> bool:
+        return self.runtime.tick()
+
+    def drain(self, max_steps: int = 100_000) -> dict:
+        return self.runtime.run(max_steps)
+
+    def summary(self) -> dict:
+        return self.runtime.report()
+
+
+@register("adaptive_sampling", presets={
+    "default": {"channels": 32, "chunk": 256},
+    "smoke": {"channels": 4, "chunk": 128},
+})
+def build_adaptive_sampling(params=None, cfg=None, reference=None,
+                            targets=None, *, channels: int, chunk: int,
+                            policy=None, align_cfg=None,
+                            use_kernel: bool = False, interpret=None,
+                            seed: int = 0):
+    """Builder: supply trained (params, cfg) + reference/targets, or get a
+    fresh CNN over a random reference with the first quarter as target."""
+    import jax
+
+    from repro.core import basecaller as bc
+    if cfg is None:
+        cfg = bc.BasecallerConfig()
+    if params is None:
+        params = bc.init(jax.random.key(seed), cfg)
+    if reference is None:
+        from repro.data import genome as G
+        reference = G.random_genome(np.random.default_rng(seed), 20_000)
+    if targets is None:
+        targets = [(0, len(reference) // 4)]
+    return AdaptiveSamplingEngine(
+        params, cfg, reference, targets, channels=channels, chunk=chunk,
+        policy=policy, align_cfg=align_cfg, use_kernel=use_kernel,
+        interpret=interpret)

@@ -1,0 +1,65 @@
+"""The ``Engine`` protocol — one serving surface for every workload.
+
+Every streaming workload (LM decode, basecalling, adaptive sampling, the
+pathogen pipeline) is the same loop on the SoC: work arrives, a fixed-shape
+scheduler admits it into slots, ``step`` advances every occupied slot by
+one fixed-shape device dispatch, finished work frees its slot.  The
+protocol pins that shape:
+
+    engine = repro.engine.build("adaptive_sampling", reference=ref, ...)
+    engine.submit(item)          # enqueue work (workload-specific payload)
+    engine.step()                # one scheduler round; False when idle
+    report = engine.drain()      # run to completion -> telemetry summary
+    engine.telemetry             # unified Telemetry (live counters)
+
+``EngineBase`` supplies the drain loop and telemetry plumbing; concrete
+engines implement ``submit`` / ``step`` and expose workload-specific
+results (``finished``, ``reads``, ``records``, ``outputs``).
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+from repro.engine.scheduler import SlotScheduler
+from repro.engine.telemetry import Telemetry
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Structural type of every serving engine."""
+    workload: str
+    telemetry: Telemetry
+
+    def submit(self, item: Any, **kwargs: Any) -> None: ...
+    def step(self) -> bool: ...
+    def drain(self, max_steps: int = 100_000) -> dict: ...
+
+
+class EngineBase:
+    """Shared scheduler + telemetry plumbing for concrete engines."""
+
+    workload: str = ""
+
+    def __init__(self, *, slots: int, depth: int | None = None):
+        self.scheduler = SlotScheduler(slots, depth=depth)
+        self.telemetry = Telemetry(workload=self.workload)
+
+    def submit(self, item: Any, **kwargs: Any) -> None:
+        self.scheduler.submit(item)
+
+    def step(self) -> bool:  # pragma: no cover - must be overridden
+        raise NotImplementedError
+
+    def drain(self, max_steps: int = 100_000) -> dict:
+        """Step until the scheduler is empty (or ``max_steps``); returns the
+        telemetry summary."""
+        steps = 0
+        while not self.scheduler.drained and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return self.summary()
+
+    def summary(self) -> dict:
+        """Telemetry summary; engines may extend with derived metrics."""
+        return self.telemetry.summary()

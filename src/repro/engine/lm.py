@@ -1,0 +1,139 @@
+"""LM decode engine: continuous batching over a fixed KV-slot pool.
+
+The decode_32k / long_500k serving shape: a fixed pool of KV-cache slots,
+requests admitted into free slots (prefill token-by-token, simple and
+exact), every ``step`` advancing *all* active slots one token, finished
+slots freeing immediately.  The slot bookkeeping that ``LMServer`` carried
+privately now lives in the shared :class:`~repro.engine.scheduler.SlotScheduler`;
+latency/throughput accounting lives in :class:`~repro.engine.telemetry.Telemetry`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.base import EngineBase
+from repro.engine.registry import register
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (L,) tokens
+    max_new_tokens: int
+    submitted_at: float = 0.0
+    tokens_out: list = dataclasses.field(default_factory=list)
+    done_at: float = 0.0
+
+
+class LMDecodeEngine(EngineBase):
+    """Slot-based continuous batching around a jitted serve_step."""
+
+    workload = "lm_decode"
+
+    def __init__(self, model, params, cfg, *, slots: int, max_len: int,
+                 eos: int = -1):
+        super().__init__(slots=slots)
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.eos = eos
+        self.cache = model.init_cache(cfg, slots, max_len)
+        self.pos = np.zeros((slots,), np.int32)
+        self.budget = np.zeros((slots,), np.int32)  # remaining new tokens
+        self.finished: list[Request] = []
+        self._step = jax.jit(
+            lambda p, c, t, pos: model.serve(p, c, t, pos, cfg))
+
+    @property
+    def slots(self) -> int:
+        return self.scheduler.slots
+
+    def submit(self, req: Request, **_) -> None:
+        req.submitted_at = time.perf_counter()
+        self.scheduler.submit(req)
+
+    def _admit(self) -> None:
+        for s, req in self.scheduler.admit():
+            # prefill: feed prompt tokens one by one (simple, exact)
+            logits = None
+            with self.telemetry.stage("prefill"):
+                for tok in req.prompt:
+                    tkn = jnp.full((self.slots, 1), 0, jnp.int32).at[s, 0].set(
+                        int(tok))
+                    pos = jnp.asarray(self.pos)
+                    logits, self.cache = self._step(self.params, self.cache,
+                                                    tkn, pos)
+                    self.telemetry.dispatches += 1
+                    self.pos[s] += 1
+            self.budget[s] = req.max_new_tokens
+            if logits is not None:
+                req.tokens_out.append(int(jnp.argmax(logits[s, -1])))
+            # empty prompt: the first decode step() seeds from token 0
+
+    def step(self) -> bool:
+        """One decode step across all active slots."""
+        t0 = time.perf_counter()
+        self._admit()
+        active = self.scheduler.active
+        if self.scheduler.n_busy == 0:
+            return False
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(active):
+            if req is not None and req.tokens_out:
+                toks[s, 0] = req.tokens_out[-1]
+        with self.telemetry.stage("decode"):
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(toks),
+                                            jnp.asarray(self.pos))
+            logits_np = np.asarray(logits[:, -1])
+        self.telemetry.dispatches += 1
+        self.telemetry.steps += 1
+        for s, req in enumerate(active):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            self.budget[s] -= 1
+            nxt = int(logits_np[s].argmax())
+            req.tokens_out.append(nxt)
+            self.telemetry.tokens += 1
+            hit_eos = (self.eos >= 0 and nxt == self.eos)
+            if self.budget[s] <= 0 or hit_eos \
+                    or self.pos[s] >= self.max_len - 1:
+                req.done_at = time.perf_counter()
+                self.finished.append(req)
+                self.scheduler.release(s)
+                self.pos[s] = 0
+                self.telemetry.completed += 1
+                self.telemetry.observe_latency(
+                    (req.done_at - req.submitted_at) * 1e3)
+        self.telemetry.wall_s += time.perf_counter() - t0
+        return True
+
+
+@register("lm_decode", presets={
+    "default": {"slots": 4, "max_len": 64},
+    "smoke": {"slots": 2, "max_len": 32},
+    "full": {"smoke": False, "slots": 8, "max_len": 512},
+})
+def build_lm_decode(model=None, params=None, cfg=None, *,
+                    arch: str = "qwen3-4b", smoke: bool = True,
+                    slots: int, max_len: int, eos: int = -1, seed: int = 0):
+    """Builder: supply (model, params, cfg) or let the preset pick an arch
+    (smoke config by default) and initialize fresh params."""
+    if cfg is None:
+        from repro.configs import ARCHS
+        spec = ARCHS[arch]
+        cfg = spec.smoke_config() if smoke else spec.config()
+    if model is None:
+        from repro.models.registry import get_model
+        model = get_model(cfg)
+    if params is None:
+        params, _ = model.init(jax.random.key(seed), cfg)
+    return LMDecodeEngine(model, params, cfg, slots=slots, max_len=max_len,
+                         eos=eos)

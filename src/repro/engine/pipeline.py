@@ -1,0 +1,129 @@
+"""Pathogen-pipeline engine: the heterogeneous streaming path, end to end.
+
+Paper Sec III at system level: raw squiggle chunks -> normalize [CORE] ->
+basecall [MAT] -> CTC decode [CORE] -> optional panel compare [ED].  Device
+dispatches are asynchronous (JAX dispatch returns before the device
+finishes), host decode of job *k* overlaps device compute of job *k+1*, and
+the bounded in-flight depth — the software analogue of a committed
+scratchpad budget — is owned by the shared ``SlotScheduler``: ``submit``
+admits the dispatched chunk into a slot and, past ``depth`` in flight,
+drains the *oldest* job first (double buffering).
+"""
+from __future__ import annotations
+
+import collections
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.base import EngineBase
+from repro.engine.registry import register
+
+
+class PathogenPipelineEngine(EngineBase):
+    """Depth-bounded streaming basecall pipeline with optional ED-engine
+    panel classification of the called reads."""
+
+    workload = "pathogen_pipeline"
+
+    def __init__(self, params, bc_cfg=None, *, depth: int = 2,
+                 use_kernel: bool = False, panel=None, detect_cfg=None):
+        from repro.core import basecaller as bc
+        bc_cfg = bc_cfg if bc_cfg is not None else bc.BasecallerConfig()
+        # the slot pool IS the in-flight bound: one slot per in-flight job
+        super().__init__(slots=depth)
+        self.params = params
+        self.cfg = bc_cfg
+        self.use_kernel = use_kernel
+        self.panel = panel
+        self.detect_cfg = detect_cfg
+        self.outputs: collections.deque = collections.deque()
+        self._bc = bc
+
+    # ---------------------------------------------------------- dispatch --
+    def submit(self, chunk: np.ndarray, **_) -> None:
+        """Dispatch one raw ``(channels, chunk_samples)`` chunk; past
+        ``depth`` in flight, host-decodes the oldest job to make room."""
+        from repro.core.pipeline import normalize_chunk
+        t0 = time.perf_counter()
+        tel = self.telemetry
+        tel.count("chunks")
+        tel.samples += int(np.asarray(chunk).size)
+        with tel.stage("normalize"):
+            sig = jnp.asarray(normalize_chunk(np.asarray(chunk)))
+        with tel.stage("basecall"):
+            logits = self._bc.apply(self.params, sig, self.cfg,
+                                    use_kernel=self.use_kernel)
+        tel.dispatches += 1
+        self.scheduler.submit(logits)   # async: device still computing
+        while not self.scheduler.admit():
+            self._drain_one()           # at depth: host-decode the oldest
+        tel.wall_s += time.perf_counter() - t0
+
+    def _drain_one(self) -> tuple[np.ndarray, np.ndarray]:
+        from repro.core import ctc
+        tel = self.telemetry
+        logits = self.scheduler.release(self.scheduler.oldest())
+        with tel.stage("decode"):
+            tokens, lens = ctc.greedy_decode(logits)
+            tokens_np, lens_np = np.asarray(tokens), np.asarray(lens)
+        tel.bases += int(lens_np.sum())
+        tel.steps += 1
+        tel.completed += len(lens_np)
+        self.outputs.append((tokens_np, lens_np))
+        return tokens_np, lens_np
+
+    def step(self) -> bool:
+        """Drain one in-flight device job; False when the pipe is empty."""
+        self.scheduler.admit()
+        if self.scheduler.n_busy == 0:
+            return False
+        t0 = time.perf_counter()
+        self._drain_one()
+        self.telemetry.wall_s += time.perf_counter() - t0
+        return True
+
+    # ----------------------------------------------------------- results --
+    def reads(self, read_len: int) -> np.ndarray:
+        """All drained reads as a fixed-width ``(R, read_len)`` array
+        (truncated / zero-padded), ready for the ED panel compare."""
+        rows = []
+        for tokens, lens in self.outputs:
+            for i in range(len(tokens)):
+                called = tokens[i][: int(lens[i])][:read_len]
+                rows.append(np.pad(called, (0, read_len - len(called))))
+        if not rows:
+            return np.zeros((0, read_len), np.int32)
+        return np.stack(rows).astype(np.int32)
+
+    def detect(self, read_len: int, mode: str = "ed"):
+        """ED-engine panel comparison of everything basecalled so far."""
+        if self.panel is None:
+            raise ValueError("no pathogen panel configured for this engine")
+        from repro.core import pathogen
+        with self.telemetry.stage("classify"):
+            report = pathogen.detect(
+                self.panel, self.reads(read_len),
+                self.detect_cfg or pathogen.DetectConfig(), mode=mode)
+        return report
+
+
+@register("pathogen_pipeline", presets={
+    "default": {"depth": 2},
+    "smoke": {"depth": 2},
+})
+def build_pathogen_pipeline(params=None, cfg=None, *, depth: int,
+                            use_kernel: bool = False, panel=None,
+                            detect_cfg=None, seed: int = 0):
+    """Builder: supply trained (params, cfg) — and a ``pathogen.Panel`` to
+    enable ``detect`` — or get a fresh paper-shaped CNN."""
+    from repro.core import basecaller as bc
+    if cfg is None:
+        cfg = bc.BasecallerConfig()
+    if params is None:
+        params = bc.init(jax.random.key(seed), cfg)
+    return PathogenPipelineEngine(params, cfg, depth=depth,
+                                  use_kernel=use_kernel, panel=panel,
+                                  detect_cfg=detect_cfg)

@@ -1,0 +1,115 @@
+"""Unified telemetry for every streaming workload.
+
+One accounting surface replaces the per-server stats dataclasses
+(``ServeStats`` / ``PipelineStats`` / ``RuntimeStats``): weighted latency
+percentiles, throughput (bases/s, samples/s, tokens/s), signal-saved
+fraction, per-stage wall time, and free-form workload counters.
+
+Latency accounting records **one observation per dispatch** with an
+explicit weight (the number of rows/reads the dispatch served), instead of
+duplicating the batch latency once per row — percentiles are computed over
+the weighted distribution, so a half-full tail batch no longer skews
+p50/p99, and throughput denominators stay correct.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import time
+
+import numpy as np
+
+
+def weighted_percentile(values, weights, q: float) -> float:
+    """Percentile ``q`` (0..100) of ``values`` under integer/float weights.
+
+    Equivalent to ``np.percentile(np.repeat(values, weights), q)`` with
+    ``interpolation='lower'``-style behaviour on the weighted CDF, but
+    without materializing the expansion.
+    """
+    v = np.asarray(values, np.float64)
+    w = np.asarray(weights, np.float64)
+    if v.size == 0:
+        return 0.0
+    order = np.argsort(v, kind="stable")
+    v, w = v[order], w[order]
+    cdf = np.cumsum(w)
+    target = q / 100.0 * cdf[-1]
+    return float(v[np.searchsorted(cdf, target, side="left").clip(0, len(v) - 1)])
+
+
+@dataclasses.dataclass
+class Telemetry:
+    """Shared accounting across all engines (the SoC's one perf counter bank).
+
+    Scalar fields cover the quantities every workload reports; workload-
+    specific event counts (accepted / ejected / chunks / ...) live in
+    ``counters``; ``stage_s`` accumulates wall time per pipeline stage
+    (sense / basecall / map / decide / prefill / ...).
+    """
+    workload: str = ""
+    wall_s: float = 0.0
+    steps: int = 0              # decode steps / ticks / drained chunks
+    dispatches: int = 0         # device dispatches
+    completed: int = 0          # finished requests / reads
+    bases: int = 0              # bases called (genomics) or emitted
+    samples: int = 0            # raw signal samples processed
+    samples_saved: int = 0      # signal never sequenced (adaptive sampling)
+    tokens: int = 0             # LM tokens decoded
+    latencies_ms: list = dataclasses.field(default_factory=list)
+    latency_weights: list = dataclasses.field(default_factory=list)
+    counters: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    stage_s: dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------ record --
+    def observe_latency(self, ms: float, weight: float = 1.0) -> None:
+        """One latency observation per dispatch/decision, weighted by how
+        many rows it served (the ServeStats duplication fix)."""
+        self.latencies_ms.append(float(ms))
+        self.latency_weights.append(float(weight))
+
+    def count(self, name: str, n: int = 1) -> None:
+        self.counters[name] += n
+
+    @contextlib.contextmanager
+    def stage(self, name: str):
+        """Accumulate wall time of a pipeline stage: ``with tel.stage("map")``."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.stage_s[name] = (self.stage_s.get(name, 0.0)
+                                  + time.perf_counter() - t0)
+
+    # ----------------------------------------------------------- derive --
+    def latency_percentile(self, q: float) -> float:
+        return weighted_percentile(self.latencies_ms, self.latency_weights, q)
+
+    def per_second(self, quantity: int) -> float:
+        return quantity / max(self.wall_s, 1e-9)
+
+    @property
+    def signal_saved_frac(self) -> float:
+        total = self.samples + self.samples_saved
+        return self.samples_saved / max(total, 1)
+
+    def summary(self) -> dict:
+        """The unified report every engine returns from ``drain``."""
+        out = {
+            "workload": self.workload,
+            "p50_ms": self.latency_percentile(50),
+            "p99_ms": self.latency_percentile(99),
+            "bases_per_s": self.per_second(self.bases),
+            "samples_per_s": self.per_second(self.samples),
+            "tokens_per_s": self.per_second(self.tokens),
+            "signal_saved_frac": self.signal_saved_frac,
+            "wall_s": self.wall_s,
+            "steps": self.steps,
+            "dispatches": self.dispatches,
+            "completed": self.completed,
+        }
+        out.update({f"stage_{k}_s": v for k, v in self.stage_s.items()})
+        out.update(self.counters)
+        return out

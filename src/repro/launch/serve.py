@@ -1,49 +1,103 @@
-"""Serving launcher: continuous-batching LM decode on the local device set.
+"""Serving launcher — the one CLI entrypoint for every streaming workload.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-      --requests 12 --slots 4
+Routes through ``repro.engine.build``; pick a workload and a preset:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload lm_decode \
+      --arch qwen3-4b --smoke --requests 12 --slots 4
+  PYTHONPATH=src python -m repro.launch.serve --workload basecall \
+      --preset smoke --requests 32
+  PYTHONPATH=src python -m repro.launch.serve --workload adaptive_sampling \
+      --preset smoke --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --workload pathogen_pipeline \
+      --requests 4
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
-import jax
 import numpy as np
 
-from repro.configs import ARCHS
-from repro.models.registry import get_model
-from repro.serving.engine import LMServer, Request
+import repro.engine as engine_api
+
+
+def _drive_lm_decode(eng, args, rng) -> dict:
+    from repro.engine.lm import Request
+    for uid in range(args.requests):
+        eng.submit(Request(
+            uid=uid, prompt=rng.integers(1, eng.cfg.vocab_size, 4),
+            max_new_tokens=args.new_tokens))
+    return eng.drain()
+
+
+def _drive_basecall(eng, args, rng) -> dict:
+    eng.submit(rng.normal(size=(args.requests, eng.chunk)).astype(np.float32))
+    return eng.drain()
+
+
+def _drive_adaptive_sampling(eng, args, rng) -> dict:
+    for i in range(args.requests):
+        eng.submit(rng.normal(size=8 * eng.runtime.chunk_samples
+                              ).astype(np.float32),
+                   read_id=i, on_target=bool(i % 2))
+    return eng.drain()
+
+
+def _drive_pathogen_pipeline(eng, args, rng) -> dict:
+    for _ in range(args.requests):
+        eng.submit(rng.normal(size=(8, 512)).astype(np.float32))
+    return eng.drain()
+
+
+_DRIVERS = {
+    "lm_decode": _drive_lm_decode,
+    "basecall": _drive_basecall,
+    "adaptive_sampling": _drive_adaptive_sampling,
+    "pathogen_pipeline": _drive_pathogen_pipeline,
+}
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b", choices=sorted(ARCHS))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", default="lm_decode",
+                    choices=engine_api.workloads())
+    ap.add_argument("--preset", default="default")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="requests / chunks / reads to drive through")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true",
+                    help="print the telemetry summary as JSON")
+    # lm_decode knobs (map onto builder overrides)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--max-len", type=int, default=None)
     ap.add_argument("--new-tokens", type=int, default=8)
     args = ap.parse_args()
 
-    spec = ARCHS[args.arch]
-    cfg = spec.smoke_config() if args.smoke else spec.config()
-    model = get_model(cfg)
-    params, _ = model.init(jax.random.key(0), cfg)
-    server = LMServer(model, params, cfg, slots=args.slots,
-                      max_len=args.max_len)
-    rng = np.random.default_rng(0)
-    t0 = time.time()
-    for uid in range(args.requests):
-        server.submit(Request(
-            uid=uid, prompt=rng.integers(1, cfg.vocab_size, 4),
-            max_new_tokens=args.new_tokens))
-    steps = server.run_until_drained()
-    wall = time.time() - t0
-    tok = sum(len(r.tokens_out) for r in server.finished)
-    print(f"{args.arch}: {len(server.finished)} requests, {tok} tokens, "
-          f"{steps} decode steps, {wall:.1f}s "
-          f"({tok / wall:.1f} tok/s host)")
+    overrides: dict = {"seed": args.seed}
+    if args.arch is not None:
+        overrides["arch"] = args.arch
+    if args.workload == "lm_decode":
+        overrides["smoke"] = args.smoke
+    if args.slots is not None:
+        overrides["slots"] = args.slots
+    if args.max_len is not None:
+        overrides["max_len"] = args.max_len
+
+    eng = engine_api.build(args.workload, preset=args.preset, **overrides)
+    rng = np.random.default_rng(args.seed)
+    report = _DRIVERS[args.workload](eng, args, rng)
+    if args.json:
+        print(json.dumps(report, default=float, indent=2))
+    else:
+        print(f"workload={args.workload} preset={args.preset}")
+        for k in ("completed", "steps", "dispatches", "p50_ms", "p99_ms",
+                  "bases_per_s", "samples_per_s", "tokens_per_s",
+                  "signal_saved_frac", "wall_s"):
+            v = report.get(k, 0)
+            print(f"  {k:18s} {v:.3f}" if isinstance(v, float)
+                  else f"  {k:18s} {v}")
 
 
 if __name__ == "__main__":

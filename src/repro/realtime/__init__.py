@@ -11,7 +11,6 @@ from repro.realtime.mapper import (MapResult, PrefixMapper,  # noqa: F401
                                    PREFIX_ALIGN_CFG, TargetPanel)
 from repro.realtime.policy import (Decision, PolicyConfig,  # noqa: F401
                                    decide)
-from repro.realtime.runtime import (AdaptiveSamplingRuntime,  # noqa: F401
-                                    RuntimeStats)
+from repro.realtime.runtime import AdaptiveSamplingRuntime  # noqa: F401
 from repro.realtime.session import (ChannelSession, ReadRecord,  # noqa: F401
                                     SimulatedRead)

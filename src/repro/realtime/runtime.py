@@ -19,6 +19,10 @@ closes that loop on top of the existing pieces:
     ACCEPT / EJECT / WAIT; EJECT frees the channel after an eject-latency
     penalty and banks the molecule's remaining signal as saved.
 
+Channel-lane bookkeeping (admission, recycling) is the shared
+:class:`repro.engine.scheduler.SlotScheduler`; accounting is the shared
+:class:`repro.engine.telemetry.Telemetry` (decision latency -> weighted
+latency observations, plus per-stage wall time for sense / basecall / map).
 Every device call is fixed-shape (idle channel lanes are zero-filled and
 their outputs ignored; lanes are reset when a new read is assigned), so the
 jitted basecall / seed-search / extension functions each compile exactly
@@ -27,8 +31,6 @@ MAT/ED engines.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
 import functools
 import time
 
@@ -38,42 +40,12 @@ import numpy as np
 
 from repro.core import basecaller as bc
 from repro.core import ctc
+from repro.engine.scheduler import SlotScheduler
+from repro.engine.telemetry import Telemetry
 from repro.realtime import policy as policy_mod
 from repro.realtime.mapper import PrefixMapper
 from repro.realtime.policy import Decision, PolicyConfig
 from repro.realtime.session import ChannelSession, ReadRecord, SimulatedRead
-
-
-@dataclasses.dataclass
-class RuntimeStats:
-    ticks: int = 0
-    reads_completed: int = 0
-    accepted: int = 0
-    ejected: int = 0
-    timeouts: int = 0
-    exhausted: int = 0
-    bases_called: int = 0
-    samples_sequenced: int = 0
-    samples_saved: int = 0
-    decision_ms: list = dataclasses.field(default_factory=list)
-    wall_s: float = 0.0
-
-    def summary(self) -> dict:
-        lat = (np.array(self.decision_ms) if self.decision_ms
-               else np.zeros(1))
-        total = self.samples_sequenced + self.samples_saved
-        return {
-            "reads": self.reads_completed,
-            "accepted": self.accepted,
-            "ejected": self.ejected,
-            "timeouts": self.timeouts,
-            "exhausted": self.exhausted,
-            "decision_p50_ms": float(np.percentile(lat, 50)),
-            "decision_p99_ms": float(np.percentile(lat, 99)),
-            "signal_saved_frac": self.samples_saved / max(total, 1),
-            "bases_per_s": self.bases_called / max(self.wall_s, 1e-9),
-            "samples_per_s": self.samples_sequenced / max(self.wall_s, 1e-9),
-        }
 
 
 class AdaptiveSamplingRuntime:
@@ -96,10 +68,10 @@ class AdaptiveSamplingRuntime:
                                         use_kernel=use_kernel)
         self.state = bc.init_stream_state(cfg, channels)
         self.prev_class = jnp.full((channels,), ctc.BLANK, jnp.int32)
-        self.sessions: list[ChannelSession | None] = [None] * channels
-        self.pending: collections.deque[SimulatedRead] = collections.deque()
+        # channel lanes: slot = sensor channel, payload = ChannelSession
+        self.scheduler = SlotScheduler(channels)
         self.records: list[ReadRecord] = []
-        self.stats = RuntimeStats()
+        self.telemetry = Telemetry(workload="adaptive_sampling")
         self._warm = False
 
     def warmup(self) -> None:
@@ -122,7 +94,7 @@ class AdaptiveSamplingRuntime:
 
     # ------------------------------------------------------------ intake --
     def submit(self, read: SimulatedRead) -> None:
-        self.pending.append(read)
+        self.scheduler.submit(read)
 
     def submit_all(self, reads) -> None:
         for r in reads:
@@ -139,17 +111,14 @@ class AdaptiveSamplingRuntime:
 
     def _assign_free(self) -> None:
         now = time.perf_counter()
-        fresh = []
-        for b in range(self.channels):
-            if self.sessions[b] is None and self.pending:
-                self.sessions[b] = ChannelSession(
-                    channel=b, read=self.pending.popleft(), started_wall=now)
-                fresh.append(b)
-        self._reset_lanes(fresh)
+        fresh = self.scheduler.admit(
+            wrap=lambda b, read: ChannelSession(channel=b, read=read,
+                                                started_wall=now))
+        self._reset_lanes([b for b, _ in fresh])
 
     def _finish(self, b: int, decision: Decision, reason: str,
                 mapped_pos: int, now: float) -> None:
-        s = self.sessions[b]
+        s = self.scheduler.release(b)
         total = s.read.total_samples
         if decision is Decision.EJECT:
             consumed = min(s.offset + self.policy.eject_latency_samples, total)
@@ -165,20 +134,19 @@ class AdaptiveSamplingRuntime:
             mapped_pos=int(mapped_pos),
             decision_ms=(now - s.started_wall) * 1e3)
         self.records.append(rec)
-        st = self.stats
-        st.reads_completed += 1
-        st.samples_sequenced += consumed
-        st.samples_saved += total - consumed
+        tel = self.telemetry
+        tel.completed += 1
+        tel.samples += consumed
+        tel.samples_saved += total - consumed
         if reason == "exhausted":
-            st.exhausted += 1
+            tel.count("exhausted")
         elif reason == "timeout":
-            st.timeouts += 1
-            st.decision_ms.append(rec.decision_ms)
+            tel.count("timeouts")
+            tel.observe_latency(rec.decision_ms)
         else:
-            st.accepted += decision is Decision.ACCEPT
-            st.ejected += decision is Decision.EJECT
-            st.decision_ms.append(rec.decision_ms)
-        self.sessions[b] = None
+            tel.count("accepted", int(decision is Decision.ACCEPT))
+            tel.count("ejected", int(decision is Decision.EJECT))
+            tel.observe_latency(rec.decision_ms)
 
     # ------------------------------------------------------------- ticks --
     def tick(self) -> bool:
@@ -186,10 +154,12 @@ class AdaptiveSamplingRuntime:
         self.warmup()
         t0 = time.perf_counter()
         self._assign_free()
-        busy = [b for b in range(self.channels) if self.sessions[b] is not None]
+        sessions = self.scheduler.active
+        busy = self.scheduler.busy
         if not busy:
             return False
-        self.stats.ticks += 1
+        tel = self.telemetry
+        tel.steps += 1
 
         # 1. sense: one fixed-shape chunk matrix across all channels.  A
         # read's final partial chunk is zero-filled; frames derived from the
@@ -197,44 +167,49 @@ class AdaptiveSamplingRuntime:
         n_frames = self.chunk_samples // self.cfg.total_stride
         rows = np.zeros((self.channels, self.chunk_samples), np.float32)
         frame_pads = np.ones((self.channels, n_frames), np.float32)
-        for b in busy:
-            s = self.sessions[b]
-            piece = s.read.signal[s.offset: s.offset + self.chunk_samples]
-            rows[b, :len(piece)] = piece
-            frame_pads[b, : len(piece) // self.cfg.total_stride] = 0.0
-            s.offset = min(s.offset + self.chunk_samples,
-                           s.read.total_samples)
+        with tel.stage("sense"):
+            for b in busy:
+                s = sessions[b]
+                piece = s.read.signal[s.offset: s.offset + self.chunk_samples]
+                rows[b, :len(piece)] = piece
+                frame_pads[b, : len(piece) // self.cfg.total_stride] = 0.0
+                s.offset = min(s.offset + self.chunk_samples,
+                               s.read.total_samples)
 
         # 2. stateful basecall + incremental CTC collapse
-        logits, self.state = self._apply(self.params, self.state,
-                                         jnp.asarray(rows))
-        tokens, lens, self.prev_class = ctc.greedy_decode_stream(
-            logits, self.prev_class, jnp.asarray(frame_pads))
-        tokens_np = np.asarray(tokens)
-        lens_np = np.asarray(lens)
+        with tel.stage("basecall"):
+            logits, self.state = self._apply(self.params, self.state,
+                                             jnp.asarray(rows))
+            tokens, lens, self.prev_class = ctc.greedy_decode_stream(
+                logits, self.prev_class, jnp.asarray(frame_pads))
+            tokens_np = np.asarray(tokens)
+            lens_np = np.asarray(lens)
+        tel.dispatches += 1
         for b in busy:
             n = int(lens_np[b])
-            self.sessions[b].append_bases(tokens_np[b, :n])
-            self.stats.bases_called += n
+            sessions[b].append_bases(tokens_np[b, :n])
+            tel.bases += n
 
         # 3. map + decide on channels with a long-enough called prefix:
         # mapping starts at min_prefix_bases (shorter windows are tail
         # zero-padded); map_prefix_bases is the full window size
         map_len = self.policy.map_prefix_bases
         cand = [b for b in busy
-                if len(self.sessions[b].bases) >= self.policy.min_prefix_bases]
+                if len(sessions[b].bases) >= self.policy.min_prefix_bases]
         if cand:
             prefixes = np.zeros((self.channels, map_len), np.int32)
             prefix_lens = np.zeros((self.channels,), np.int64)
             for b in cand:
                 # latest window, not the literal prefix: a WAIT retry then
                 # maps fresh bases instead of re-trying identical evidence
-                window = self.sessions[b].bases[-map_len:]
+                window = sessions[b].bases[-map_len:]
                 prefixes[b, :len(window)] = window
-                prefix_lens[b] = len(self.sessions[b].bases)
-            res = self.mapper.map_prefixes(prefixes)
-            decisions, reasons = policy_mod.decide(
-                res.mapped, res.on_target, res.mapq, prefix_lens, self.policy)
+                prefix_lens[b] = len(sessions[b].bases)
+            with tel.stage("map"):
+                res = self.mapper.map_prefixes(prefixes)
+                decisions, reasons = policy_mod.decide(
+                    res.mapped, res.on_target, res.mapq, prefix_lens,
+                    self.policy)
             now = time.perf_counter()
             for b in cand:
                 if decisions[b] is not Decision.WAIT:
@@ -244,22 +219,28 @@ class AdaptiveSamplingRuntime:
         # 4. reads that ran dry without a decision were sequenced in full
         now = time.perf_counter()
         for b in busy:
-            s = self.sessions[b]
+            s = sessions[b]
             if s is not None and s.exhausted:
                 self._finish(b, Decision.ACCEPT, "exhausted", -1, now)
 
-        self.stats.wall_s += time.perf_counter() - t0
+        tel.wall_s += time.perf_counter() - t0
         return True
 
     def run(self, max_ticks: int = 100_000) -> dict:
         while self.tick():
-            if self.stats.ticks >= max_ticks:
+            if self.telemetry.steps >= max_ticks:
                 break
         return self.report()
 
     # ----------------------------------------------------------- metrics --
     def report(self) -> dict:
-        out = self.stats.summary()
+        out = self.telemetry.summary()
+        # domain-named aliases kept alongside the unified telemetry keys
+        out["reads"] = self.telemetry.completed
+        out["decision_p50_ms"] = out["p50_ms"]
+        out["decision_p99_ms"] = out["p99_ms"]
+        for k in ("accepted", "ejected", "timeouts", "exhausted"):
+            out.setdefault(k, 0)
         recs = self.records
         truth = [r for r in recs if r.on_target is not None]
         if truth:

@@ -1,2 +1,6 @@
-"""Serving runtime: KV-cache slots, continuous batching, basecall server,
-and the adaptive-sampling (Read-Until) server built on repro.realtime."""
+"""Deprecated serving surface — thin shims over :mod:`repro.engine`.
+
+``LMServer`` / ``BasecallServer`` / ``AdaptiveSamplingServer`` delegate to
+``repro.engine.build("lm_decode" | "basecall" | "adaptive_sampling")``."""
+from repro.serving.engine import (AdaptiveSamplingServer,  # noqa: F401
+                                  BasecallServer, LMServer, Request)

@@ -1,221 +1,148 @@
-"""Continuous-batching serving engines.
+"""Deprecated serving surfaces — thin shims over :mod:`repro.engine`.
 
-Two engines share the slot machinery:
+The three servers that used to live here (``LMServer``, ``BasecallServer``,
+``AdaptiveSamplingServer``) each re-implemented submit/step/drain loops,
+slot bookkeeping, and a bespoke stats dataclass.  That substrate now lives
+in ``repro.engine`` (one ``SlotScheduler``, one ``Telemetry``, one
+``build`` entrypoint); these classes remain as deprecation shims that
+delegate to the engines built by ``repro.engine.build`` and produce
+identical results for the old signatures.
 
-  * ``LMServer``      — decode loop for the assigned LMs: fixed pool of KV
-                        cache slots; requests are admitted into free slots,
-                        every ``serve_step`` advances *all* active slots one
-                        token (continuous batching), finished slots free
-                        immediately.  This is the decode_32k / long_500k
-                        workload the dry-run lowers.
-  * ``BasecallServer``— the paper's serving shape: raw signal chunks stream
-                        in per channel; chunks are batched across channels,
-                        basecalled (MAT path), CTC-decoded and returned with
-                        latency accounting (p50/p99) — Sec II's "real-time"
-                        requirement made measurable.
+New code:
+
+    eng = repro.engine.build("lm_decode", model=m, params=p, cfg=cfg,
+                             slots=4, max_len=64)
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
-from typing import Any, Callable, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-
-# ----------------------------------------------------------------- LM ----
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray           # (L,) tokens
-    max_new_tokens: int
-    submitted_at: float = 0.0
-    tokens_out: list = dataclasses.field(default_factory=list)
-    done_at: float = 0.0
+import repro.engine as engine_api
+from repro.engine.lm import Request  # noqa: F401  (re-export, old import path)
 
 
-class LMServer:
-    """Slot-based continuous batching around a jitted serve_step."""
-
-    def __init__(self, model, params, cfg, *, slots: int, max_len: int,
-                 eos: int = -1):
-        self.model = model
-        self.params = params
-        self.cfg = cfg
-        self.slots = slots
-        self.max_len = max_len
-        self.eos = eos
-        self.cache = model.init_cache(cfg, slots, max_len)
-        self.pos = np.zeros((slots,), np.int32)
-        self.budget = np.zeros((slots,), np.int32)  # remaining new tokens
-        self.active: list[Optional[Request]] = [None] * slots
-        self.queue: deque[Request] = deque()
-        self.finished: list[Request] = []
-        self._step = jax.jit(
-            lambda p, c, t, pos: model.serve(p, c, t, pos, cfg))
-
-    def submit(self, req: Request):
-        req.submitted_at = time.perf_counter()
-        self.queue.append(req)
-
-    def _admit(self):
-        for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.popleft()
-                self.active[s] = req
-                # prefill: feed prompt tokens one by one (simple, exact)
-                logits = None
-                for i, tok in enumerate(req.prompt):
-                    tkn = jnp.full((self.slots, 1), 0, jnp.int32).at[s, 0].set(
-                        int(tok))
-                    pos = jnp.asarray(self.pos)
-                    logits, self.cache = self._step(self.params, self.cache,
-                                                    tkn, pos)
-                    self.pos[s] += 1
-                self.budget[s] = req.max_new_tokens
-                if logits is not None:
-                    req.tokens_out.append(int(jnp.argmax(logits[s, -1])))
-                # empty prompt: the first decode step() seeds from token 0
-
-    def step(self):
-        """One decode step across all active slots."""
-        self._admit()
-        if not any(a is not None for a in self.active):
-            return False
-        toks = np.zeros((self.slots, 1), np.int32)
-        for s, req in enumerate(self.active):
-            if req is not None and req.tokens_out:
-                toks[s, 0] = req.tokens_out[-1]
-        logits, self.cache = self._step(self.params, self.cache,
-                                        jnp.asarray(toks),
-                                        jnp.asarray(self.pos))
-        logits_np = np.asarray(logits[:, -1])
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            self.pos[s] += 1
-            self.budget[s] -= 1
-            nxt = int(logits_np[s].argmax())
-            req.tokens_out.append(nxt)
-            hit_eos = (self.eos >= 0 and nxt == self.eos)
-            if self.budget[s] <= 0 or hit_eos \
-                    or self.pos[s] >= self.max_len - 1:
-                req.done_at = time.perf_counter()
-                self.finished.append(req)
-                self.active[s] = None
-                self.pos[s] = 0
-        return True
-
-    def run_until_drained(self, max_steps: int = 100_000):
-        steps = 0
-        while (self.queue or any(a is not None for a in self.active)) \
-                and steps < max_steps:
-            self.step()
-            steps += 1
-        return steps
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use repro.engine.build({new}) instead",
+        DeprecationWarning, stacklevel=3)
 
 
-# ----------------------------------------------------------- basecall ----
-@dataclasses.dataclass
-class ServeStats:
-    latencies_ms: list = dataclasses.field(default_factory=list)
-    bases: int = 0
-    samples: int = 0
-    wall_s: float = 0.0
+class _LegacyStatsView:
+    """Old ``ServeStats`` surface backed by the unified ``Telemetry``."""
+
+    def __init__(self, telemetry):
+        self._tel = telemetry
+
+    @property
+    def latencies_ms(self):
+        return self._tel.latencies_ms
+
+    @property
+    def bases(self):
+        return self._tel.bases
+
+    @property
+    def samples(self):
+        return self._tel.samples
+
+    @property
+    def wall_s(self):
+        return self._tel.wall_s
 
     def summary(self) -> dict:
-        lat = np.array(self.latencies_ms) if self.latencies_ms else np.zeros(1)
         return {
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
-            "bases_per_s": self.bases / max(self.wall_s, 1e-9),
-            "samples_per_s": self.samples / max(self.wall_s, 1e-9),
+            "p50_ms": self._tel.latency_percentile(50),
+            "p99_ms": self._tel.latency_percentile(99),
+            "bases_per_s": self._tel.per_second(self._tel.bases),
+            "samples_per_s": self._tel.per_second(self._tel.samples),
         }
 
 
+class LMServer:
+    """Deprecated: ``repro.engine.build("lm_decode", ...)``."""
+
+    def __init__(self, model, params, cfg, *, slots: int, max_len: int,
+                 eos: int = -1):
+        _deprecated("LMServer", '"lm_decode"')
+        self._eng = engine_api.build("lm_decode", model=model, params=params,
+                                     cfg=cfg, slots=slots, max_len=max_len,
+                                     eos=eos)
+
+    @property
+    def finished(self):
+        return self._eng.finished
+
+    @property
+    def queue(self):
+        return self._eng.scheduler.queue
+
+    @property
+    def active(self):
+        return self._eng.scheduler.active
+
+    def submit(self, req: Request):
+        self._eng.submit(req)
+
+    def step(self) -> bool:
+        return self._eng.step()
+
+    def run_until_drained(self, max_steps: int = 100_000) -> int:
+        start = self._eng.telemetry.steps
+        self._eng.drain(max_steps)
+        return self._eng.telemetry.steps - start
+
+
 class BasecallServer:
-    """Batched streaming basecalls with per-chunk latency accounting."""
+    """Deprecated: ``repro.engine.build("basecall", ...)``."""
 
     def __init__(self, params, bc_cfg, *, batch: int, chunk: int,
                  use_kernel: bool = False):
-        import functools
+        _deprecated("BasecallServer", '"basecall"')
+        self._eng = engine_api.build("basecall", params=params, cfg=bc_cfg,
+                                     batch=batch, chunk=chunk,
+                                     use_kernel=use_kernel)
 
-        from repro.core import basecaller, ctc
-        self.params = params
-        self.cfg = bc_cfg
-        self.batch = batch
-        self.chunk = chunk
-        self._apply = jax.jit(functools.partial(
-            basecaller.apply, cfg=bc_cfg, use_kernel=use_kernel))
-        self._decode = jax.jit(ctc.greedy_decode)
-        self.stats = ServeStats()
+    @property
+    def stats(self) -> _LegacyStatsView:
+        return _LegacyStatsView(self._eng.telemetry)
 
     def serve(self, signal_chunks: np.ndarray) -> list[np.ndarray]:
-        """signal_chunks: (N, chunk) normalized signal; batches of
-        ``self.batch`` are dispatched; returns decoded token arrays."""
-        out = []
-        t_start = time.perf_counter()
-        for i in range(0, len(signal_chunks), self.batch):
-            chunk_rows = signal_chunks[i: i + self.batch]
-            t0 = time.perf_counter()
-            logits = self._apply(self.params, jnp.asarray(chunk_rows))
-            tokens, lens = self._decode(logits)
-            tokens.block_until_ready()
-            dt = (time.perf_counter() - t0) * 1e3
-            for j in range(len(chunk_rows)):
-                self.stats.latencies_ms.append(dt)
-                ln = int(lens[j])
-                out.append(np.asarray(tokens[j][:ln]))
-                self.stats.bases += ln
-            self.stats.samples += int(chunk_rows.size)
-        self.stats.wall_s += time.perf_counter() - t_start
-        return out
+        return self._eng.serve(signal_chunks)
 
 
-# ----------------------------------------------------- adaptive sampling ----
 class AdaptiveSamplingServer:
-    """Read-Until serving shape beside ``BasecallServer``.
-
-    Where ``BasecallServer`` turns finished signal chunks into reads, this
-    engine serves the *selective sequencing* workload: raw reads stream in
-    per channel, the realtime runtime basecalls their prefixes statefully,
-    maps them against a target panel, and returns keep/eject decisions with
-    latency + signal-saved accounting.  Construction wires the runtime from
-    serving-level inputs (reference + target intervals).
-    """
+    """Deprecated: ``repro.engine.build("adaptive_sampling", ...)``."""
 
     def __init__(self, params, bc_cfg, reference, target_intervals, *,
                  channels: int = 32, chunk: int = 256, policy=None,
                  align_cfg=None, use_kernel: bool = False, interpret=None):
-        from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
-                                    PrefixMapper, PREFIX_ALIGN_CFG,
-                                    TargetPanel)
-        panel = TargetPanel.build(reference, target_intervals)
-        mapper = PrefixMapper(panel, align_cfg or PREFIX_ALIGN_CFG,
-                              interpret=interpret)
-        self.runtime = AdaptiveSamplingRuntime(
-            params, bc_cfg, mapper, policy or PolicyConfig(),
-            channels=channels, chunk_samples=chunk, use_kernel=use_kernel)
+        _deprecated("AdaptiveSamplingServer", '"adaptive_sampling"')
+        self._eng = engine_api.build(
+            "adaptive_sampling", params=params, cfg=bc_cfg,
+            reference=reference, targets=target_intervals, channels=channels,
+            chunk=chunk, policy=policy, align_cfg=align_cfg,
+            use_kernel=use_kernel, interpret=interpret)
 
-    def submit(self, signal: np.ndarray, *, read_id: int = 0,
-               on_target: bool | None = None, position: int = -1) -> None:
-        from repro.realtime import SimulatedRead
-        self.runtime.submit(SimulatedRead(
-            signal=np.asarray(signal, np.float32), read_id=read_id,
-            on_target=on_target, position=position))
-
-    def step(self) -> bool:
-        return self.runtime.tick()
-
-    def run_until_drained(self, max_ticks: int = 100_000) -> dict:
-        return self.runtime.run(max_ticks)
+    @property
+    def runtime(self):
+        return self._eng.runtime
 
     @property
     def records(self):
-        return self.runtime.records
+        return self._eng.records
+
+    def submit(self, signal: np.ndarray, *, read_id: int = 0,
+               on_target: bool | None = None, position: int = -1) -> None:
+        self._eng.submit(signal, read_id=read_id, on_target=on_target,
+                         position=position)
+
+    def step(self) -> bool:
+        return self._eng.step()
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> dict:
+        return self._eng.drain(max_ticks)
 
     def summary(self) -> dict:
-        return self.runtime.report()
+        return self._eng.summary()

@@ -95,18 +95,19 @@ class TestPipelineGlue:
         np.testing.assert_array_equal(out[0, :3], [3, 4, 1])
 
     def test_streaming_pipeline_runs(self, key):
+        import repro.engine as engine_api
         from repro.core import basecaller as bc
         cfg = bc.BasecallerConfig(kernels=(3, 3, 1), channels=(16, 16, 5),
                                   strides=(1, 2, 1))
         params = bc.init(key, cfg)
-        pipe = pipeline.StreamingBasecallPipeline(params, cfg)
+        eng = engine_api.build("pathogen_pipeline", params=params, cfg=cfg)
         rng = np.random.default_rng(7)
-        chunks = [rng.normal(size=(4, 512)).astype(np.float32)
-                  for _ in range(3)]
-        outs = list(pipe.run(iter(chunks)))
-        assert len(outs) == 3
-        assert pipe.stats.chunks == 3
-        assert pipe.stats.samples_in == 3 * 4 * 512
+        for _ in range(3):
+            eng.submit(rng.normal(size=(4, 512)).astype(np.float32))
+        eng.drain()
+        assert len(eng.outputs) == 3
+        assert eng.telemetry.counters["chunks"] == 3
+        assert eng.telemetry.samples == 3 * 4 * 512
 
 
 class TestVariantCaller:

@@ -212,7 +212,7 @@ class TestRuntime:
         assert report["ejected"] + report["timeouts"] + report["accepted"] \
             + report["exhausted"] == 6
         assert report["signal_saved_frac"] > 0.0
-        assert runtime.stats.samples_saved + runtime.stats.samples_sequenced \
+        assert runtime.telemetry.samples_saved + runtime.telemetry.samples \
             == 6 * 900
 
     def test_rejects_misaligned_chunk_size(self, rng):

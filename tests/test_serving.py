@@ -1,13 +1,13 @@
-"""Serving engines: continuous batching LM server + basecall server."""
+"""Unified engine API: lm_decode / basecall / adaptive_sampling engines."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.engine as engine_api
 from repro.configs import ARCHS
+from repro.engine.lm import Request
 from repro.models.registry import get_model
-from repro.serving.engine import (AdaptiveSamplingServer, BasecallServer,
-                                  LMServer, Request)
 
 
 @pytest.fixture(scope="module")
@@ -18,63 +18,86 @@ def lm():
     return model, params, cfg
 
 
-class TestLMServer:
+class TestLMDecodeEngine:
     def test_serves_all_requests(self, lm):
         model, params, cfg = lm
-        srv = LMServer(model, params, cfg, slots=2, max_len=32)
+        eng = engine_api.build("lm_decode", model=model, params=params,
+                               cfg=cfg, slots=2, max_len=32)
         rng = np.random.default_rng(0)
         for uid in range(5):
-            srv.submit(Request(uid=uid,
+            eng.submit(Request(uid=uid,
                                prompt=rng.integers(1, cfg.vocab_size, 3),
                                max_new_tokens=4))
-        srv.run_until_drained()
-        assert len(srv.finished) == 5
-        for req in srv.finished:
+        report = eng.drain()
+        assert len(eng.finished) == 5
+        assert report["completed"] == 5
+        assert report["tokens_per_s"] > 0
+        for req in eng.finished:
             assert len(req.tokens_out) >= 4
             assert req.done_at >= req.submitted_at
 
     def test_continuous_batching_overlaps(self, lm):
         """More requests than slots: slots are reused as requests finish."""
         model, params, cfg = lm
-        srv = LMServer(model, params, cfg, slots=2, max_len=16)
+        eng = engine_api.build("lm_decode", model=model, params=params,
+                               cfg=cfg, slots=2, max_len=16)
         for uid in range(4):
-            srv.submit(Request(uid=uid, prompt=np.array([1, 2]),
+            eng.submit(Request(uid=uid, prompt=np.array([1, 2]),
                                max_new_tokens=3))
-        steps = srv.run_until_drained()
-        assert len(srv.finished) == 4
+        report = eng.drain()
+        assert len(eng.finished) == 4
         # 4 requests x 3 tokens on 2 slots can't be fully sequential
-        assert steps < 4 * 6
+        assert report["steps"] < 4 * 6
 
     def test_empty_prompt_does_not_crash(self, lm):
         """Regression: empty prompt used to hit an unbound ``logits``."""
         model, params, cfg = lm
-        srv = LMServer(model, params, cfg, slots=2, max_len=16)
-        srv.submit(Request(uid=0, prompt=np.zeros(0, np.int32),
+        eng = engine_api.build("lm_decode", model=model, params=params,
+                               cfg=cfg, slots=2, max_len=16)
+        eng.submit(Request(uid=0, prompt=np.zeros(0, np.int32),
                            max_new_tokens=3))
-        srv.submit(Request(uid=1, prompt=np.array([1, 2]), max_new_tokens=3))
-        srv.run_until_drained()
-        assert len(srv.finished) == 2
-        empty = next(r for r in srv.finished if r.uid == 0)
+        eng.submit(Request(uid=1, prompt=np.array([1, 2]), max_new_tokens=3))
+        eng.drain()
+        assert len(eng.finished) == 2
+        empty = next(r for r in eng.finished if r.uid == 0)
         assert len(empty.tokens_out) >= 3
 
 
-class TestBasecallServer:
+class TestBasecallEngine:
     def test_latency_and_throughput_accounting(self):
         from repro.core import basecaller as bc
         cfg = bc.BasecallerConfig(kernels=(3, 3, 1), channels=(16, 16, 5),
                                   strides=(1, 2, 1))
         params = bc.init(jax.random.key(0), cfg)
-        srv = BasecallServer(params, cfg, batch=4, chunk=512)
+        eng = engine_api.build("basecall", params=params, cfg=cfg,
+                               batch=4, chunk=512)
         rng = np.random.default_rng(0)
         chunks = rng.normal(size=(8, 512)).astype(np.float32)
-        outs = srv.serve(chunks)
+        outs = eng.serve(chunks)
         assert len(outs) == 8
-        s = srv.stats.summary()
+        s = eng.summary()
         assert s["p99_ms"] >= s["p50_ms"] > 0
-        assert srv.stats.samples == 8 * 512
+        assert eng.telemetry.samples == 8 * 512
+        # one latency observation per dispatch, weighted by rows served
+        assert len(eng.telemetry.latencies_ms) == 2
+        assert eng.telemetry.latency_weights == [4.0, 4.0]
+        assert s["dispatches"] == 2
+
+    def test_tail_batch_weighting(self):
+        """A half-full tail dispatch contributes with half the weight."""
+        from repro.core import basecaller as bc
+        cfg = bc.BasecallerConfig(kernels=(3, 1), channels=(8, 5),
+                                  strides=(1, 2))
+        params = bc.init(jax.random.key(0), cfg)
+        eng = engine_api.build("basecall", params=params, cfg=cfg,
+                               batch=4, chunk=256)
+        rng = np.random.default_rng(1)
+        eng.serve(rng.normal(size=(6, 256)).astype(np.float32))
+        assert eng.telemetry.latency_weights == [4.0, 2.0]
+        assert eng.telemetry.completed == 6
 
 
-class TestAdaptiveSamplingServer:
+class TestAdaptiveSamplingEngine:
     def test_serves_reads_with_decisions(self):
         from repro.core import basecaller as bc
         from repro.data import genome as G
@@ -83,13 +106,18 @@ class TestAdaptiveSamplingServer:
         params = bc.init(jax.random.key(0), cfg)
         rng = np.random.default_rng(3)
         reference = G.random_genome(rng, 3_000)
-        srv = AdaptiveSamplingServer(params, cfg, reference, [(0, 1_000)],
-                                     channels=4, chunk=128)
+        eng = engine_api.build("adaptive_sampling", params=params, cfg=cfg,
+                               reference=reference, targets=[(0, 1_000)],
+                               channels=4, chunk=128)
         for i in range(6):
-            srv.submit(rng.normal(size=700).astype(np.float32), read_id=i,
+            eng.submit(rng.normal(size=700).astype(np.float32), read_id=i,
                        on_target=bool(i % 2))
-        summary = srv.run_until_drained(max_ticks=500)
+        summary = eng.drain(max_steps=500)
         assert summary["reads"] == 6
-        assert len(srv.records) == 6
+        assert summary["completed"] == 6
+        assert len(eng.records) == 6
         assert summary["decision_p99_ms"] >= summary["decision_p50_ms"] >= 0
         assert 0.0 <= summary["signal_saved_frac"] <= 1.0
+        # per-stage wall time accumulated for the SoC loop stages
+        for stage in ("sense", "basecall"):
+            assert eng.telemetry.stage_s.get(stage, 0.0) > 0.0
