@@ -15,6 +15,8 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
   bench_adaptive         Read-Until loop: decision latency + signal saved
                          (see adaptive_sampling.py; stateful streaming vs
                          re-running the CNN over the growing read)
+  bench_kernel_dispatch  compute fabric: per-op throughput on each execution
+                         target + dispatch/fallback counter deltas
 """
 from __future__ import annotations
 
@@ -79,7 +81,7 @@ def bench_edit_distance():
     p, m, n = 128, 100, 100
     q = jnp.asarray(rng.integers(1, 5, (p, m)).astype(np.int32))
     t = jnp.asarray(rng.integers(1, 5, (p, n)).astype(np.int32))
-    fn = jax.jit(lambda a, b: ops.edit_distance(a, b, use_kernel=False))
+    fn = jax.jit(lambda a, b: ops.edit_distance(a, b, fabric="reference"))
     us, _ = timeit(fn, q, t)
     pairs_per_s = p / (us / 1e6)
     soc = SoCModel()
@@ -92,7 +94,8 @@ def bench_edit_distance():
     # wavefront kernel (interpret mode): correctness-path cell rate
     us_k, _ = timeit(
         lambda a, b: ops.edit_distance(a[:8], b[:8], block_p=8,
-                                       interpret=True), q, t, n=1, warmup=1)
+                                       fabric="pallas_interpret"),
+        q, t, n=1, warmup=1)
     row("ed_kernel_interpret_8", us_k,
         f"cells_per_s={8 * m * n / (us_k / 1e6):.0f}(interpret)")
 
@@ -205,6 +208,61 @@ def bench_adaptive():
     ad.bench_adaptive()
 
 
+def bench_kernel_dispatch():
+    """Compute fabric: each registered op on each target, with the
+    dispatch/fallback counters the engine telemetry surfaces."""
+    from repro.kernels import fabric, ops
+    rng = np.random.default_rng(0)
+    key = jax.random.key
+
+    # inputs built once, outside the timed region (like every other bench)
+    mm_a = jax.random.normal(key(0), (256, 256), jnp.float32)
+    mm_b = jax.random.normal(key(1), (256, 256), jnp.float32)
+    cv_x = jax.random.normal(key(0), (4, 512, 64), jnp.float32)
+    cv_w = jax.random.normal(key(1), (5, 64, 128), jnp.float32)
+    ed_q = jnp.asarray(rng.integers(1, 5, (32, 64)).astype(np.int32))
+    ed_t = jnp.asarray(rng.integers(1, 5, (32, 64)).astype(np.int32))
+    fa_q = jax.random.normal(key(0), (1, 4, 256, 64), jnp.float32)
+    fa_k = jax.random.normal(key(1), (1, 4, 256, 64), jnp.float32)
+    fa_v = jax.random.normal(key(2), (1, 4, 256, 64), jnp.float32)
+    sx = jax.random.normal(key(0), (4, 256, 16)) * 0.5
+    sla = -jax.nn.softplus(jax.random.normal(key(1), (4, 256)))
+    sb = jax.random.normal(key(2), (4, 256, 32)) * 0.3
+    sc = jax.random.normal(key(3), (4, 256, 32)) * 0.3
+    jax.block_until_ready((mm_a, mm_b, cv_x, cv_w, ed_q, ed_t, fa_q, fa_k,
+                           fa_v, sx, sla, sb, sc))
+
+    cases = {
+        "matmul": lambda fab: ops.mat_mul(mm_a, mm_b, fabric=fab),
+        "conv1d": lambda fab: ops.conv1d(cv_x, cv_w, padding="valid",
+                                         fabric=fab),
+        "edit_distance": lambda fab: ops.edit_distance(ed_q, ed_t,
+                                                       fabric=fab),
+        "banded_align": lambda fab: ops.banded_align(ed_q, ed_t, band=16,
+                                                     local=True, fabric=fab),
+        "flash_attention": lambda fab: ops.flash_attention(fa_q, fa_k, fa_v,
+                                                           fabric=fab),
+        "ssd_scan": lambda fab: ops.ssd_scan(sx, sla, sb, sc, fabric=fab),
+    }
+    targets = ["reference", "pallas_interpret"]
+    if jax.default_backend() == "tpu":
+        targets.append("pallas_tpu")
+    for op, thunk in cases.items():
+        for target in targets:
+            n = 3 if target == "reference" else 1
+            jax.block_until_ready(thunk(target))  # warmup/compile
+            # snapshot AFTER warmup so dispatch counts match the timed calls
+            base = fabric.counters()
+            us, _ = timeit(lambda: thunk(target), n=n, warmup=0)
+            delta = fabric.counters_delta(base)
+            dispatched = delta.get(f"fabric.dispatch.{op}.{target}", 0)
+            fallbacks = sum(v for k, v in delta.items()
+                            if k.startswith(f"fabric.fallback.{op}."))
+            row(f"kernel_dispatch:{op}:{target}", us,
+                f"dispatches={dispatched};fallbacks={fallbacks}"
+                f";calls_per_s={1e6 / max(us, 1e-9):.1f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -213,19 +271,36 @@ def main() -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as JSON (e.g. BENCH_smoke.json) "
                          "for perf-trajectory tracking")
+    ap.add_argument("--only", metavar="NAMES", default=None,
+                    help="comma-separated bench names to run (e.g. "
+                         "'kernel_dispatch' for the CI kernel artifact)")
     args = ap.parse_args()
 
+    benches = {
+        "basecaller": bench_basecaller,
+        "edit_distance": bench_edit_distance,
+        "alignment": bench_alignment,
+        "variant_caller": bench_variant_caller,
+        "pipeline": bench_pipeline,
+        "ctc": bench_ctc,
+        "moe_dispatch": bench_moe_dispatch,
+        "roofline": bench_roofline,
+        "kernel_dispatch": bench_kernel_dispatch,
+        "adaptive": bench_adaptive,
+    }
+    if args.only:
+        selected = [n.strip() for n in args.only.split(",")]
+        unknown = [n for n in selected if n not in benches]
+        if unknown:
+            ap.error(f"unknown benches {unknown}; available: "
+                     f"{sorted(benches)}")
+    else:
+        selected = [n for n in benches
+                    if n != "adaptive" or not args.smoke]
+
     print("name,us_per_call,derived")
-    bench_basecaller()
-    bench_edit_distance()
-    bench_alignment()
-    bench_variant_caller()
-    bench_pipeline()
-    bench_ctc()
-    bench_moe_dispatch()
-    bench_roofline()
-    if not args.smoke:
-        bench_adaptive()
+    for name in selected:
+        benches[name]()
 
     if args.json:
         with open(args.json, "w") as f:

@@ -1,0 +1,201 @@
+"""Offline tuning-table generator for the compute fabric.
+
+Sweeps candidate block sizes per op and shape bucket on the *current*
+machine/target and emits the JSON table ``repro.kernels.fabric`` loads:
+
+    {"_meta": {...},
+     "matmul": {"default": {"block_m": 256, ...},
+                "m256_n256_k256": {"block_m": 128, ...}},
+     ...}
+
+Bucket keys come from each op's registered bucket function, so a table
+entry applies to every shape that lands in the same bucket at dispatch
+time.  The checked-in ``src/repro/kernels/tuning_default.json`` was
+produced by ``--quick --target pallas_interpret`` (this container's CPU
+config); re-run on real TPU hardware with ``--target pallas_tpu`` and a
+wider sweep to refine it.
+
+    PYTHONPATH=src python benchmarks/tune_kernels.py --quick \
+        --out src/repro/kernels/tuning_default.json
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fabric, ops
+
+
+def _time(fn, n: int, warmup: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n
+
+
+def _grid(**axes):
+    names = list(axes)
+    for combo in itertools.product(*(axes[n] for n in names)):
+        yield dict(zip(names, combo))
+
+
+# One entry per op: shape cases (op args for bucketing + a thunk factory)
+# and the candidate tunables swept per case.  ``quick`` trims both.
+def _cases(quick: bool):
+    key = jax.random.key
+    rng = np.random.default_rng(0)
+
+    def matmul_case(m, n, k):
+        a = jax.random.normal(key(0), (m, k), jnp.float32)
+        b = jax.random.normal(key(1), (k, n), jnp.float32)
+        return ((a, b), {},
+                lambda tune, fab: ops.mat_mul(a, b, fabric=fab, **tune))
+
+    def conv_case(t, cin, cout, ksize):
+        x = jax.random.normal(key(0), (4, t, cin), jnp.float32)
+        w = jax.random.normal(key(1), (ksize, cin, cout), jnp.float32)
+        return ((x, w), {},
+                lambda tune, fab: ops.conv1d(x, w, padding="valid",
+                                             fabric=fab, **tune))
+
+    def ed_case(p, m, n):
+        q = jnp.asarray(rng.integers(1, 5, (p, m)).astype(np.int32))
+        t = jnp.asarray(rng.integers(1, 5, (p, n)).astype(np.int32))
+        return ((q, t), {},
+                lambda tune, fab: ops.edit_distance(q, t, fabric=fab, **tune))
+
+    def banded_case(p, m, n, band):
+        q = jnp.asarray(rng.integers(1, 5, (p, m)).astype(np.int32))
+        t = jnp.asarray(rng.integers(1, 5, (p, n)).astype(np.int32))
+        return ((q, t), {"band": band},
+                lambda tune, fab: ops.banded_align(q, t, band=band,
+                                                   local=True, fabric=fab,
+                                                   **tune))
+
+    def fa_case(s, d):
+        q = jax.random.normal(key(0), (1, 4, s, d), jnp.float32)
+        k = jax.random.normal(key(1), (1, 4, s, d), jnp.float32)
+        v = jax.random.normal(key(2), (1, 4, s, d), jnp.float32)
+        return ((q, k), {},
+                lambda tune, fab: ops.flash_attention(q, k, v, fabric=fab,
+                                                      **tune))
+
+    def ssd_case(t, dh, ds):
+        x = jax.random.normal(key(0), (4, t, dh)) * 0.5
+        la = -jax.nn.softplus(jax.random.normal(key(1), (4, t)))
+        b = jax.random.normal(key(2), (4, t, ds)) * 0.3
+        c = jax.random.normal(key(3), (4, t, ds)) * 0.3
+        return ((x, la, b), {},
+                lambda tune, fab: ops.ssd_scan(x, la, b, c, fabric=fab,
+                                               **tune))
+
+    if quick:
+        return {
+            "matmul": ([matmul_case(256, 256, 256)],
+                       _grid(block_m=[128, 256], block_n=[128, 256],
+                             block_k=[128, 256])),
+            "conv1d": ([conv_case(512, 64, 128, 5)],
+                       _grid(block_t=[64, 128, 256], block_n=[128])),
+            "edit_distance": ([ed_case(32, 64, 64)],
+                              _grid(block_p=[8, 16, 32])),
+            "banded_align": ([banded_case(32, 64, 64, 16)],
+                             _grid(block_p=[8, 16, 32])),
+            "flash_attention": ([fa_case(256, 64)],
+                                _grid(block_q=[128, 256],
+                                      block_k=[128, 256])),
+            "ssd_scan": ([ssd_case(256, 16, 32)],
+                         _grid(chunk=[64, 128, 256])),
+        }
+    return {
+        "matmul": ([matmul_case(256, 256, 256), matmul_case(512, 512, 512),
+                    matmul_case(1024, 256, 1024)],
+                   _grid(block_m=[128, 256, 512], block_n=[128, 256, 512],
+                         block_k=[128, 256, 512])),
+        "conv1d": ([conv_case(512, 64, 128, 5), conv_case(2048, 64, 192, 9)],
+                   _grid(block_t=[64, 128, 256, 512], block_n=[128, 256])),
+        "edit_distance": ([ed_case(32, 64, 64), ed_case(128, 100, 100)],
+                          _grid(block_p=[8, 16, 32, 64, 128])),
+        "banded_align": ([banded_case(32, 64, 64, 16),
+                          banded_case(128, 100, 100, 32)],
+                         _grid(block_p=[8, 16, 32, 64, 128])),
+        "flash_attention": ([fa_case(256, 64), fa_case(1024, 64)],
+                            _grid(block_q=[128, 256, 512],
+                                  block_k=[128, 256, 512])),
+        "ssd_scan": ([ssd_case(256, 16, 32), ssd_case(1024, 64, 64)],
+                     _grid(chunk=[64, 128, 256, 512])),
+    }
+
+
+def tune(target: str, quick: bool, n: int, warmup: int) -> dict:
+    table: dict = {}
+    for op, (cases, grid) in _cases(quick).items():
+        spec = fabric.op_spec(op)
+        grid = list(grid)
+        table[op] = {"default": dict(spec.tunables)}
+        for args, kwargs, thunk in cases:
+            bucket = spec.bucket(args, kwargs) if spec.bucket else "default"
+            best, best_t = None, float("inf")
+            for tune_params in grid:
+                if spec.supported is not None:
+                    ok, _ = spec.supported(args, kwargs,
+                                           {**spec.tunables, **tune_params})
+                    if not ok:
+                        continue
+                try:
+                    dt = _time(lambda: thunk(tune_params, target), n, warmup)
+                except Exception as e:  # noqa: BLE001 — skip invalid combos
+                    print(f"#   {op} {bucket} {tune_params}: {e}",
+                          file=sys.stderr)
+                    continue
+                print(f"# {op} {bucket} {tune_params} -> {dt * 1e3:.2f} ms",
+                      flush=True)
+                if dt < best_t:
+                    best, best_t = dict(tune_params), dt
+            if best is not None:
+                table[op][bucket] = best
+    return table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--target", default="pallas_interpret",
+                    choices=["pallas_tpu", "pallas_interpret"],
+                    help="execution target to tune for")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (the checked-in default table)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: print to stdout)")
+    ap.add_argument("-n", type=int, default=3, help="timed reps per combo")
+    ap.add_argument("--warmup", type=int, default=1)
+    args = ap.parse_args()
+
+    table = tune(args.target, args.quick, args.n, args.warmup)
+    table["_meta"] = {
+        "target": args.target,
+        "backend": jax.default_backend(),
+        "quick": args.quick,
+        "generator": "benchmarks/tune_kernels.py",
+    }
+    text = json.dumps(table, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"# wrote {args.out}")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

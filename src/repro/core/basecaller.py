@@ -21,8 +21,11 @@ Our instantiation (params incl. biases = 460,261; the two k=9 layers hold
 
 Every layer lowers onto the MAT matmul/conv kernels (kernels/conv1d.py) —
 the same "pure-CNN so the systolic array does everything" co-design as the
-paper.  ``use_kernel=False`` selects the XLA path (used for CPU training;
-numerically identical, asserted in tests).
+paper.  Execution placement (Pallas kernel vs XLA reference; numerically
+identical, asserted in tests) is owned by the compute fabric: pass
+``fabric=`` (a target name or ``FabricPolicy``) or set one with
+``repro.kernels.fabric.use(...)``.  The policy rides in the jit static
+arguments, so changing it retraces instead of reusing a stale placement.
 """
 from __future__ import annotations
 
@@ -33,6 +36,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fabric as fabric_mod
 from repro.kernels import ops
 
 NUM_CLASSES = 5  # blank + ACGT
@@ -80,9 +84,16 @@ def num_params(params) -> int:
     return sum(int(x.size) for x in jax.tree.leaves(params))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel", "padding"))
+def _resolve_policy(caller: str, use_kernel, fabric) -> fabric_mod.FabricPolicy:
+    """Deprecated-kwarg translation + ambient resolution to a concrete,
+    hashable policy (a jit static argument below)."""
+    return fabric_mod.as_policy(
+        fabric_mod.legacy_policy(caller, use_kernel, fabric=fabric))
+
+
 def apply(params, signal: jax.Array, cfg: BasecallerConfig = BasecallerConfig(),
-          *, use_kernel: bool = False, padding: str = "same") -> jax.Array:
+          *, use_kernel=fabric_mod.UNSET, padding: str = "same",
+          fabric=None) -> jax.Array:
     """signal: (B, T) or (B, T, 1) normalized current -> logits (B, T', 5).
 
     ``padding="same"`` is the offline whole-read path (centered padding).
@@ -90,14 +101,25 @@ def apply(params, signal: jax.Array, cfg: BasecallerConfig = BasecallerConfig(),
     exact whole-read reference for the chunked streaming path below: running
     ``apply_stream`` over any chunking of the signal concatenates to this
     output (requires T % cfg.total_stride == 0; emits T/total_stride frames).
+
+    ``fabric`` picks the execution target (kernel vs reference); default is
+    the ambient compute-fabric policy.  ``use_kernel=`` remains as a
+    DeprecationWarning shim.
     """
+    pol = _resolve_policy("basecaller.apply", use_kernel, fabric)
     if padding == "stream":
         state = init_stream_state(cfg, signal.shape[0])
-        logits, _ = apply_stream(params, state, signal, cfg,
-                                 use_kernel=use_kernel)
+        logits, _ = _apply_stream_jit(params, state, signal, cfg=cfg,
+                                      fabric=pol)
         return logits
     if padding != "same":
         raise ValueError(padding)
+    return _apply_jit(params, signal, cfg=cfg, fabric=pol)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "fabric"))
+def _apply_jit(params, signal, *, cfg: BasecallerConfig,
+               fabric: fabric_mod.FabricPolicy):
     x = signal[..., None] if signal.ndim == 2 else signal
     x = x.astype(cfg.dtype)
     n = len(cfg.kernels)
@@ -105,7 +127,7 @@ def apply(params, signal: jax.Array, cfg: BasecallerConfig = BasecallerConfig(),
         p = params[f"conv{i + 1}"]
         act = "relu" if i < n - 1 else "none"
         x = ops.conv1d(x, p["w"], p["b"], stride=cfg.strides[i],
-                       padding="same", activation=act, use_kernel=use_kernel)
+                       padding="same", activation=act, fabric=fabric)
     return x
 
 
@@ -130,10 +152,9 @@ def init_stream_state(cfg: BasecallerConfig, batch: int):
             for rows, cin in stream_state_spec(cfg)]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
 def apply_stream(params, state, chunk: jax.Array,
                  cfg: BasecallerConfig = BasecallerConfig(),
-                 *, use_kernel: bool = False):
+                 *, use_kernel=fabric_mod.UNSET, fabric=None):
     """One stateful streaming step: basecall a chunk, carrying conv overlap.
 
     chunk: (B, T) or (B, T, 1) with T % cfg.total_stride == 0.  Returns
@@ -141,6 +162,13 @@ def apply_stream(params, state, chunk: jax.Array,
     chunk and concatenating the logits equals ``apply(..., padding="stream")``
     over the whole read — each chunk costs O(chunk), not O(read-so-far).
     """
+    pol = _resolve_policy("basecaller.apply_stream", use_kernel, fabric)
+    return _apply_stream_jit(params, state, chunk, cfg=cfg, fabric=pol)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "fabric"))
+def _apply_stream_jit(params, state, chunk, *, cfg: BasecallerConfig,
+                      fabric: fabric_mod.FabricPolicy):
     x = chunk[..., None] if chunk.ndim == 2 else chunk
     if x.shape[1] % cfg.total_stride:
         raise ValueError(f"chunk length {x.shape[1]} must be a multiple of "
@@ -153,7 +181,7 @@ def apply_stream(params, state, chunk: jax.Array,
         act = "relu" if i < n - 1 else "none"
         x, carry = ops.conv1d_stream(x, p["w"], p["b"], state[i],
                                      stride=cfg.strides[i], activation=act,
-                                     use_kernel=use_kernel)
+                                     fabric=fabric)
         new_state.append(carry)
     return x, new_state
 

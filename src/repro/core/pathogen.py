@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fm_index, seed_extend
+from repro.kernels import fabric as fabric_mod
 from repro.kernels import ops
 
 
@@ -66,12 +67,17 @@ def _genome_windows(genome: np.ndarray, window: int, overlap: int):
 
 
 def score_reads_ed(reads: np.ndarray, genome: np.ndarray,
-                   cfg: DetectConfig = DetectConfig(), *, interpret=None):
+                   cfg: DetectConfig = DetectConfig(), *,
+                   interpret=fabric_mod.UNSET, fabric=None):
     """Best SW score of each read against any window of ``genome``.
 
     reads: (R, L).  Returns (R,) int32 best scores.  This is the ED-engine
     firehose: R x n_windows wavefront DPs, batched 128-wide on the VPU.
+    Placement comes from the compute-fabric policy (``interpret=`` is a
+    deprecated shim).
     """
+    fabric = fabric_mod.legacy_policy("pathogen.score_reads_ed",
+                                      interpret=interpret, fabric=fabric)
     r, l = reads.shape
     wins = _genome_windows(genome, cfg.window, overlap=l)
     w = wins.shape[0]
@@ -79,7 +85,7 @@ def score_reads_ed(reads: np.ndarray, genome: np.ndarray,
     t = jnp.asarray(np.tile(wins, (r, 1)))
     scores = ops.banded_align(
         q, t, band=cfg.window, match=cfg.match, mismatch=cfg.mismatch,
-        gap=cfg.gap, local=True, interpret=interpret)
+        gap=cfg.gap, local=True, fabric=fabric)
     return np.asarray(scores).reshape(r, w).max(axis=1)
 
 
@@ -94,14 +100,16 @@ class DetectionReport:
 
 def detect(panel: Panel, reads: np.ndarray,
            cfg: DetectConfig = DetectConfig(), *, mode: str = "ed",
-           interpret=None) -> DetectionReport:
+           interpret=fabric_mod.UNSET, fabric=None) -> DetectionReport:
     """Classify reads against the panel and call presence per pathogen."""
+    fabric = fabric_mod.legacy_policy("pathogen.detect", interpret=interpret,
+                                      fabric=fabric)
     r, l = reads.shape
     all_scores = np.zeros((len(panel.genomes), r), np.int64)
     for gi, genome in enumerate(panel.genomes):
         if mode == "ed":
             all_scores[gi] = score_reads_ed(reads, genome, cfg,
-                                            interpret=interpret)
+                                            fabric=fabric)
         elif mode == "fm":
             assert panel.indexes is not None
             res = seed_extend.align_reads(
@@ -109,7 +117,7 @@ def detect(panel: Panel, reads: np.ndarray,
                 seed_extend.AlignConfig(match=cfg.match,
                                         mismatch=cfg.mismatch, gap=cfg.gap,
                                         min_score_frac=cfg.min_read_frac),
-                interpret=interpret)
+                fabric=fabric)
             all_scores[gi] = np.where(res.accepted, res.scores, 0)
         else:
             raise ValueError(mode)

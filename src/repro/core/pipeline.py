@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import fabric as fabric_mod
 from repro.kernels import ops
 
 
@@ -47,19 +48,23 @@ def normalize_chunk(x: np.ndarray) -> np.ndarray:
 
 
 def demux_reads(reads: np.ndarray, barcodes: np.ndarray, *,
-                max_dist: int = 3, interpret=None) -> np.ndarray:
+                max_dist: int = 3, interpret=fabric_mod.UNSET,
+                fabric=None) -> np.ndarray:
     """Assign reads to samples by barcode edit distance (paper: "a low-cost
     un-gapped string comparison" — we use the ED kernel, which subsumes it).
 
     reads: (R, L) with the barcode at the 5' end; barcodes: (S, Lb).
-    Returns (R,) sample index or -1.
+    Returns (R,) sample index or -1.  The ED-engine placement comes from the
+    compute-fabric policy (``interpret=`` is a deprecated shim).
     """
+    pol = fabric_mod.legacy_policy("pipeline.demux_reads",
+                                   interpret=interpret, fabric=fabric)
     r = reads.shape[0]
     s, lb = barcodes.shape
     prefix = reads[:, :lb]
     q = jnp.asarray(np.repeat(prefix, s, axis=0))
     t = jnp.asarray(np.tile(barcodes, (r, 1)))
-    d = np.asarray(ops.edit_distance(q, t, interpret=interpret))
+    d = np.asarray(ops.edit_distance(q, t, fabric=pol))
     d = d.reshape(r, s)
     best = d.argmin(axis=1)
     return np.where(d[np.arange(r), best] <= max_dist, best, -1)
@@ -111,9 +116,11 @@ class StreamingBasecallPipeline:
         from repro.core import basecaller as bc
         cfg = cfg if cfg is not None else bc.BasecallerConfig()
         self.pipe_cfg = pipe_cfg
+        # old boolean -> fabric target (old default False == reference path)
         self._eng = engine_api.build("pathogen_pipeline", params=params,
                                      cfg=cfg, depth=pipe_cfg.depth,
-                                     use_kernel=use_kernel)
+                                     fabric="pallas" if use_kernel
+                                     else "reference")
 
     @property
     def stats(self) -> PipelineStats:

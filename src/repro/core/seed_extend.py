@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fm_index
+from repro.kernels import fabric as fabric_mod
 from repro.kernels import ops
 
 
@@ -87,8 +88,14 @@ def _vote_candidates(hits: np.ndarray, offsets: np.ndarray, genome_len: int,
 
 def align_reads(index: fm_index.FMIndex, genome: np.ndarray,
                 reads: np.ndarray, cfg: AlignConfig = AlignConfig(),
-                *, interpret=None) -> AlignmentResult:
-    """Align a batch of reads against ``genome`` (1..4 tokens)."""
+                *, interpret=fabric_mod.UNSET, fabric=None) -> AlignmentResult:
+    """Align a batch of reads against ``genome`` (1..4 tokens).
+
+    The banded-extension placement (ED kernel vs oracle) comes from the
+    compute-fabric policy; ``interpret=`` is a deprecated shim.
+    """
+    fabric = fabric_mod.legacy_policy("seed_extend.align_reads",
+                                      interpret=interpret, fabric=fabric)
     reads_j = jnp.asarray(reads)
     r, l = reads.shape
     seeds, offsets = _extract_seeds(reads_j, cfg)
@@ -113,7 +120,7 @@ def align_reads(index: fm_index.FMIndex, genome: np.ndarray,
     t = jnp.asarray(windows.reshape(r * cfg.max_candidates, wlen))
     scores = ops.banded_align(
         q, t, band=2 * cfg.band, match=cfg.match, mismatch=cfg.mismatch,
-        gap=cfg.gap, local=True, interpret=interpret)
+        gap=cfg.gap, local=True, fabric=fabric)
     scores = np.asarray(scores).reshape(r, cfg.max_candidates)
     scores = np.where(cands >= 0, scores, -(10 ** 9))
 

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import fabric as fabric_mod
 from repro.kernels import ops
 
 N_FEATURES = 9
@@ -115,15 +116,26 @@ def init(rng: jax.Array, cfg: CallerConfig = CallerConfig()):
     return params
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
 def apply(params, windows: jax.Array, cfg: CallerConfig = CallerConfig(),
-          *, use_kernel: bool = False):
-    """windows: (S, W, 9) -> (genotype logits (S,3), alt-base logits (S,4))."""
+          *, use_kernel=fabric_mod.UNSET, fabric=None):
+    """windows: (S, W, 9) -> (genotype logits (S,3), alt-base logits (S,4)).
+
+    Execution placement comes from the compute-fabric policy (``fabric=``,
+    else ambient); ``use_kernel=`` remains as a DeprecationWarning shim.
+    """
+    pol = fabric_mod.as_policy(fabric_mod.legacy_policy(
+        "variant_caller.apply", use_kernel, fabric=fabric))
+    return _apply_jit(params, windows, cfg=cfg, fabric=pol)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "fabric"))
+def _apply_jit(params, windows, *, cfg: CallerConfig,
+               fabric: fabric_mod.FabricPolicy):
     x = windows.astype(cfg.dtype)
     for i in range(len(cfg.channels)):
         p = params[f"conv{i + 1}"]
         x = ops.conv1d(x, p["w"], p["b"], padding="same", activation="relu",
-                       use_kernel=use_kernel)
+                       fabric=fabric)
     x = x.reshape(x.shape[0], -1)  # keep positions: flatten (W, C)
     h = jax.nn.relu(x @ params["dense"]["w"] + params["dense"]["b"])
     gt = h @ params["head_gt"]["w"] + params["head_gt"]["b"]

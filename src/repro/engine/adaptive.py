@@ -11,6 +11,22 @@ from __future__ import annotations
 import numpy as np
 
 from repro.engine.registry import register
+from repro.kernels import fabric as fabric_mod
+
+
+def legacy_adaptive_policy(use_kernel: bool = False,
+                           interpret=None) -> "fabric_mod.FabricPolicy":
+    """Faithful FabricPolicy for the old per-stage booleans: ``use_kernel``
+    placed only the basecall CNN (default off -> reference); ``interpret``
+    placed the prefix mapper's banded_align, which always ran as a kernel
+    (interpret=None meant backend-appropriate).  Shared by this engine's
+    deprecated kwargs and the legacy AdaptiveSamplingServer shim."""
+    pol = fabric_mod.FabricPolicy(target="pallas" if use_kernel
+                                  else "reference")
+    return pol.with_op(
+        "banded_align",
+        "pallas" if interpret is None
+        else ("pallas_interpret" if interpret else "pallas_tpu"))
 
 
 class AdaptiveSamplingEngine:
@@ -21,16 +37,36 @@ class AdaptiveSamplingEngine:
 
     def __init__(self, params, bc_cfg, reference, target_intervals, *,
                  channels: int = 32, chunk: int = 256, policy=None,
-                 align_cfg=None, use_kernel: bool = False, interpret=None):
+                 align_cfg=None, use_kernel=fabric_mod.UNSET,
+                 interpret=fabric_mod.UNSET, fabric=None):
+        import warnings
+
         from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
                                     PrefixMapper, PREFIX_ALIGN_CFG,
                                     TargetPanel)
+        # one fabric policy covers basecall (MAT) and prefix mapping (ED).
+        # The old kwargs were PER-STAGE: use_kernel placed only the basecall
+        # CNN (default off -> reference) while interpret placed the mapper's
+        # banded_align, which always ran as a kernel — so the faithful shim
+        # is a global target from use_kernel plus a per-op banded_align
+        # override from interpret, not one collapsed target.
+        if (use_kernel is not fabric_mod.UNSET
+                or interpret is not fabric_mod.UNSET):
+            warnings.warn(
+                "AdaptiveSamplingEngine: use_kernel=/interpret= are "
+                "deprecated; pass fabric= (a target name or FabricPolicy)",
+                DeprecationWarning, stacklevel=3)
+            self.fabric = legacy_adaptive_policy(
+                False if use_kernel is fabric_mod.UNSET else use_kernel,
+                None if interpret is fabric_mod.UNSET else interpret)
+        else:
+            self.fabric = fabric_mod.as_policy(fabric)
         self.panel = TargetPanel.build(reference, target_intervals)
         mapper = PrefixMapper(self.panel, align_cfg or PREFIX_ALIGN_CFG,
-                              interpret=interpret)
+                              fabric=self.fabric)
         self.runtime = AdaptiveSamplingRuntime(
             params, bc_cfg, mapper, policy or PolicyConfig(),
-            channels=channels, chunk_samples=chunk, use_kernel=use_kernel)
+            channels=channels, chunk_samples=chunk, fabric=self.fabric)
 
     @property
     def telemetry(self):
@@ -75,7 +111,8 @@ class AdaptiveSamplingEngine:
 def build_adaptive_sampling(params=None, cfg=None, reference=None,
                             targets=None, *, channels: int, chunk: int,
                             policy=None, align_cfg=None,
-                            use_kernel: bool = False, interpret=None,
+                            use_kernel=fabric_mod.UNSET,
+                            interpret=fabric_mod.UNSET, fabric=None,
                             seed: int = 0):
     """Builder: supply trained (params, cfg) + reference/targets, or get a
     fresh CNN over a random reference with the first quarter as target."""
@@ -94,4 +131,4 @@ def build_adaptive_sampling(params=None, cfg=None, reference=None,
     return AdaptiveSamplingEngine(
         params, cfg, reference, targets, channels=channels, chunk=chunk,
         policy=policy, align_cfg=align_cfg, use_kernel=use_kernel,
-        interpret=interpret)
+        interpret=interpret, fabric=fabric)

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.engine.base import EngineBase
 from repro.engine.registry import register
+from repro.kernels import fabric as fabric_mod
 
 
 class BasecallEngine(EngineBase):
@@ -29,15 +30,20 @@ class BasecallEngine(EngineBase):
     workload = "basecall"
 
     def __init__(self, params, bc_cfg, *, batch: int, chunk: int,
-                 use_kernel: bool = False):
+                 use_kernel=fabric_mod.UNSET, fabric=None):
         from repro.core import basecaller, ctc
         super().__init__(slots=batch)
         self.params = params
         self.cfg = bc_cfg
         self.batch = batch
         self.chunk = chunk
-        self._apply = jax.jit(functools.partial(
-            basecaller.apply, cfg=bc_cfg, use_kernel=use_kernel))
+        # kernel placement: one fabric policy for the whole engine, resolved
+        # here and carried in the basecaller's jit static args (``use_kernel=``
+        # remains a deprecated shim)
+        self.fabric = fabric_mod.as_policy(fabric_mod.legacy_policy(
+            "BasecallEngine", use_kernel, fabric=fabric))
+        self._apply = functools.partial(
+            basecaller.apply, cfg=bc_cfg, fabric=self.fabric)
         self._decode = jax.jit(ctc.greedy_decode)
         # undrained decoded reads; serve() consumes the slice it produced
         self.reads: list[np.ndarray] = []
@@ -98,7 +104,7 @@ class BasecallEngine(EngineBase):
     "smoke": {"batch": 4, "chunk": 512},
 })
 def build_basecall(params=None, cfg=None, *, batch: int, chunk: int,
-                   use_kernel: bool = False, seed: int = 0):
+                   use_kernel=fabric_mod.UNSET, fabric=None, seed: int = 0):
     """Builder: supply trained (params, cfg) or get a fresh paper-shaped CNN."""
     from repro.core import basecaller as bc
     if cfg is None:
@@ -106,4 +112,4 @@ def build_basecall(params=None, cfg=None, *, batch: int, chunk: int,
     if params is None:
         params = bc.init(jax.random.key(seed), cfg)
     return BasecallEngine(params, cfg, batch=batch, chunk=chunk,
-                          use_kernel=use_kernel)
+                          use_kernel=use_kernel, fabric=fabric)

@@ -36,19 +36,27 @@ class LMDecodeEngine(EngineBase):
     workload = "lm_decode"
 
     def __init__(self, model, params, cfg, *, slots: int, max_len: int,
-                 eos: int = -1):
+                 eos: int = -1, fabric=None):
+        from repro.kernels import fabric as fabric_mod
         super().__init__(slots=slots)
         self.model = model
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.eos = eos
+        self.fabric = fabric_mod.as_policy(fabric)
         self.cache = model.init_cache(cfg, slots, max_len)
         self.pos = np.zeros((slots,), np.int32)
         self.budget = np.zeros((slots,), np.int32)  # remaining new tokens
         self.finished: list[Request] = []
-        self._step = jax.jit(
-            lambda p, c, t, pos: model.serve(p, c, t, pos, cfg))
+
+        def _serve(p, c, t, pos):
+            # model layers read the fabric policy at trace time; this jit is
+            # per-engine, so the placement is pinned per engine instance
+            with fabric_mod.use(self.fabric):
+                return model.serve(p, c, t, pos, cfg)
+
+        self._step = jax.jit(_serve)
 
     @property
     def slots(self) -> int:
@@ -123,7 +131,8 @@ class LMDecodeEngine(EngineBase):
 })
 def build_lm_decode(model=None, params=None, cfg=None, *,
                     arch: str = "qwen3-4b", smoke: bool = True,
-                    slots: int, max_len: int, eos: int = -1, seed: int = 0):
+                    slots: int, max_len: int, eos: int = -1, fabric=None,
+                    seed: int = 0):
     """Builder: supply (model, params, cfg) or let the preset pick an arch
     (smoke config by default) and initialize fresh params."""
     if cfg is None:
@@ -136,4 +145,4 @@ def build_lm_decode(model=None, params=None, cfg=None, *,
     if params is None:
         params, _ = model.init(jax.random.key(seed), cfg)
     return LMDecodeEngine(model, params, cfg, slots=slots, max_len=max_len,
-                         eos=eos)
+                         eos=eos, fabric=fabric)

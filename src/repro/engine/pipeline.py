@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.engine.base import EngineBase
 from repro.engine.registry import register
+from repro.kernels import fabric as fabric_mod
 
 
 class PathogenPipelineEngine(EngineBase):
@@ -29,14 +30,17 @@ class PathogenPipelineEngine(EngineBase):
     workload = "pathogen_pipeline"
 
     def __init__(self, params, bc_cfg=None, *, depth: int = 2,
-                 use_kernel: bool = False, panel=None, detect_cfg=None):
+                 use_kernel=fabric_mod.UNSET, fabric=None, panel=None,
+                 detect_cfg=None):
         from repro.core import basecaller as bc
         bc_cfg = bc_cfg if bc_cfg is not None else bc.BasecallerConfig()
         # the slot pool IS the in-flight bound: one slot per in-flight job
         super().__init__(slots=depth)
         self.params = params
         self.cfg = bc_cfg
-        self.use_kernel = use_kernel
+        # MAT/ED placement for basecall + panel compare: one fabric policy
+        self.fabric = fabric_mod.as_policy(fabric_mod.legacy_policy(
+            "PathogenPipelineEngine", use_kernel, fabric=fabric))
         self.panel = panel
         self.detect_cfg = detect_cfg
         self.outputs: collections.deque = collections.deque()
@@ -55,7 +59,7 @@ class PathogenPipelineEngine(EngineBase):
             sig = jnp.asarray(normalize_chunk(np.asarray(chunk)))
         with tel.stage("basecall"):
             logits = self._bc.apply(self.params, sig, self.cfg,
-                                    use_kernel=self.use_kernel)
+                                    fabric=self.fabric)
         tel.dispatches += 1
         self.scheduler.submit(logits)   # async: device still computing
         while not self.scheduler.admit():
@@ -106,7 +110,8 @@ class PathogenPipelineEngine(EngineBase):
         with self.telemetry.stage("classify"):
             report = pathogen.detect(
                 self.panel, self.reads(read_len),
-                self.detect_cfg or pathogen.DetectConfig(), mode=mode)
+                self.detect_cfg or pathogen.DetectConfig(), mode=mode,
+                fabric=self.fabric)
         return report
 
 
@@ -115,8 +120,8 @@ class PathogenPipelineEngine(EngineBase):
     "smoke": {"depth": 2},
 })
 def build_pathogen_pipeline(params=None, cfg=None, *, depth: int,
-                            use_kernel: bool = False, panel=None,
-                            detect_cfg=None, seed: int = 0):
+                            use_kernel=fabric_mod.UNSET, fabric=None,
+                            panel=None, detect_cfg=None, seed: int = 0):
     """Builder: supply trained (params, cfg) — and a ``pathogen.Panel`` to
     enable ``detect`` — or get a fresh paper-shaped CNN."""
     from repro.core import basecaller as bc
@@ -125,5 +130,5 @@ def build_pathogen_pipeline(params=None, cfg=None, *, depth: int,
     if params is None:
         params = bc.init(jax.random.key(seed), cfg)
     return PathogenPipelineEngine(params, cfg, depth=depth,
-                                  use_kernel=use_kernel, panel=panel,
-                                  detect_cfg=detect_cfg)
+                                  use_kernel=use_kernel, fabric=fabric,
+                                  panel=panel, detect_cfg=detect_cfg)

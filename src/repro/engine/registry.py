@@ -65,7 +65,12 @@ def presets(workload: str) -> dict[str, dict]:
 
 def build(workload: str, preset: str = "default", **overrides: Any):
     """Construct an engine: resolve the workload's builder, start from the
-    named preset's keywords, and apply ``overrides`` on top."""
+    named preset's keywords, and apply ``overrides`` on top.
+
+    Every workload accepts ``fabric=`` (a :class:`repro.kernels.fabric.
+    FabricPolicy`, or a target name like ``"pallas_interpret"``) to pin the
+    kernel execution targets for the whole engine; default is the ambient
+    compute-fabric policy."""
     builder = _resolve(workload)
     table = _PRESETS[workload]
     if preset not in table:

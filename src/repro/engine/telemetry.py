@@ -63,6 +63,27 @@ class Telemetry:
         default_factory=collections.Counter)
     stage_s: dict = dataclasses.field(default_factory=dict)
 
+    def __post_init__(self):
+        # kernel-dispatch accounting: snapshot the process-wide compute-
+        # fabric counters so summary() can report this engine's delta —
+        # which target served each op, forced fallbacks, pad waste
+        from repro.kernels import fabric as _fabric
+        self._fabric = _fabric
+        self._fabric_baseline = _fabric.counters()
+
+    def fabric_counters(self) -> dict:
+        """Kernel-dispatch counters accumulated since this Telemetry was
+        created: ``fabric.dispatch.<op>.<target>``, ``fabric.fallback.*``,
+        ``fabric.pad_waste_elems.*``, ``fabric.precision.*``.
+
+        Units: entries from ``fabric.dispatch()`` (every ``ops.*`` call)
+        count each *execution*; entries recorded by the model layers via
+        ``fabric.note()`` count each placement *decision* (one per trace) —
+        treat the latter as "which engine ran which path", not FLOP volume.
+        The delta is process-wide (see :mod:`repro.kernels.fabric`): exact
+        per-engine only for the usual one-engine-at-a-time serving shape."""
+        return self._fabric.counters_delta(self._fabric_baseline)
+
     # ------------------------------------------------------------ record --
     def observe_latency(self, ms: float, weight: float = 1.0) -> None:
         """One latency observation per dispatch/decision, weighted by how
@@ -112,4 +133,5 @@ class Telemetry:
         }
         out.update({f"stage_{k}_s": v for k, v in self.stage_s.items()})
         out.update(self.counters)
+        out.update(self.fabric_counters())
         return out

@@ -1,10 +1,14 @@
 """Pallas TPU kernels for the paper accelerators and assigned-arch hot spots.
 
+  fabric.py          compute fabric: one dispatch policy for every kernel
+                     (targets, per-op tuning tables, placement counters)
   matmul.py          MAT: systolic GEMM (fused bias/activation, int8 path)
   conv1d.py          basecaller conv-as-GEMM (in-kernel im2col)
   edit_distance.py   ED: anti-diagonal wavefront DP (levenshtein + banded NW/SW)
   flash_attention.py blocked online-softmax attention
   ssd_scan.py        Mamba-2 SSD chunked scan
-  ops.py             public padded/dispatching wrappers
+  ops.py             public entry points: thin wrappers over fabric.dispatch
   ref.py             pure-jnp oracles
+  tuning_default.json  checked-in shape-bucketed block-size table
+                     (regenerate with benchmarks/tune_kernels.py)
 """

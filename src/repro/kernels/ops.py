@@ -1,63 +1,202 @@
-"""Public entry points for the kernel package.
+"""Public entry points for the kernel package — thin fabric wrappers.
 
-Each op:
-  * pads operands up to kernel block alignment,
-  * dispatches to the Pallas kernel on TPU (interpret-mode on CPU so the
-    same code path is exercised end-to-end in this container), or to the
-    pure-jnp oracle when ``use_kernel=False`` / shapes are tiny,
-  * unpads the result.
+Each op registers itself with :mod:`repro.kernels.fabric` (reference path,
+Pallas path, shape-support predicate, tunable block sizes) and the public
+function is a thin wrapper over :func:`fabric.dispatch`:
 
-The `interpret` decision is made once at import time from the backend;
-tests override it explicitly.
+  * the **policy** (explicit ``fabric=`` arg, else the innermost
+    ``fabric.use(...)`` context, else the global policy) picks the
+    execution target per call — there is no per-op ``use_kernel`` /
+    ``interpret`` keyword soup anymore (both still work as
+    DeprecationWarning shims that translate into a one-call policy
+    override),
+  * the dispatcher pads operands up to kernel block alignment (block sizes
+    from the per-op shape-bucketed tuning table, overridable per call),
+    runs the chosen target, and unpads the result,
+  * shapes the Pallas path cannot serve (e.g. matmul m<8 / n<128 / k<128 —
+    sublane/lane alignment floors) fall back to the jnp oracle and are
+    **counted** under ``fabric.fallback.<op>.<reason>``; every dispatch is
+    counted under ``fabric.dispatch.<op>.<target>`` at execution time, so
+    a silent fallback is a visible counter, not an undocumented branch.
+
+The target is resolved per call at trace time (never "once at import
+time"): jitted callers carry the policy in their static arguments so a
+policy change retraces.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import conv1d as _conv1d
 from repro.kernels import edit_distance as _ed
+from repro.kernels import fabric
+# the public wrappers take a ``fabric=`` keyword that shadows the module
+# name inside their bodies — they use this alias instead
+from repro.kernels import fabric as _fabric_mod
 from repro.kernels import flash_attention as _fa
 from repro.kernels import matmul as _mm
 from repro.kernels import ref
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels.fabric import UNSET as _UNSET
+from repro.kernels.fabric import pow2_bucket as _pb
 from repro.utils.shapes import next_multiple, pad_to_multiple
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+# ---------------------------------------------------------------- matmul --
+def _matmul_supported(args, kwargs, tune):
+    a, b = args[0], args[1]
+    m, k = a.shape
+    n = b.shape[1]
+    # sublane/lane alignment floors (MXU tile): the kernel cannot serve
+    # degenerate shapes — previously a silent `if m < 8 or ...` branch.
+    if m < 8:
+        return False, "m_lt_8"
+    if n < 128:
+        return False, "n_lt_128"
+    if k < 128:
+        return False, "k_lt_128"
+    return True, ""
 
 
-def mat_mul(a, b, bias=None, *, activation: str = "none", block_m: int = 256,
-            block_n: int = 256, block_k: int = 512, out_dtype=None,
-            use_kernel: bool = True, interpret: Optional[bool] = None):
-    """activation(a @ b + bias) for arbitrary (M, K) x (K, N)."""
-    if not use_kernel:
-        return ref.matmul(a, b, bias, activation=activation, out_dtype=out_dtype)
-    interpret = _interpret_default() if interpret is None else interpret
+def _matmul_bucket(args, kwargs):
+    a, b = args[0], args[1]
+    m, k = a.shape
+    n = b.shape[1]
+    return f"m{_pb(m)}_n{_pb(n)}_k{_pb(k)}"
+
+
+def _matmul_pallas(a, b, bias=None, *, activation="none", out_dtype=None,
+                   interpret, tune):
     m, k = a.shape
     _, n = b.shape
-    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    # sublane/lane alignment: fall back to oracle for degenerate shapes
-    if m < 8 or n < 128 or k < 128:
-        return ref.matmul(a, b, bias, activation=activation, out_dtype=out_dtype)
+    # precision policy: "auto" keeps the operand dtype (int operands already
+    # take the int8->int32 MAC path inside the kernel); "int8" additionally
+    # quantizes float operands onto the MAT fixed-point MACs — the paper's
+    # quantized-basecaller configuration, selectable per shape bucket.
+    precision = tune.get("precision", "auto")
+    if precision == "int8" and not jnp.issubdtype(a.dtype, jnp.integer):
+        return _matmul_int8_quantized(a, b, bias, activation=activation,
+                                      out_dtype=out_dtype,
+                                      interpret=interpret, tune=tune)
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        fabric.record("fabric.precision.matmul.int8")
+    bm = min(tune["block_m"], m)
+    bn = min(tune["block_n"], n)
+    bk = min(tune["block_k"], k)
     ap = pad_to_multiple(pad_to_multiple(a, bm, 0), bk, 1)
     bp = pad_to_multiple(pad_to_multiple(b, bk, 0), bn, 1)
     biasp = pad_to_multiple(bias, bn, 0) if bias is not None else None
     out = _mm.matmul(ap, bp, biasp, block_m=bm, block_n=bn, block_k=bk,
                      activation=activation, out_dtype=out_dtype,
                      interpret=interpret)
-    return out[:m, :n]
+    waste = ap.shape[0] * bp.shape[1] - m * n
+    return out[:m, :n], waste
+
+
+def _matmul_int8_quantized(a, b, bias, *, activation, out_dtype, interpret,
+                           tune):
+    """Float GEMM on the int8 MAC path: per-tensor symmetric quantization,
+    int32 accumulation in the kernel, dequantize + bias + activation in
+    float (the epilogue stays exact; the inner int8 dispatch records the
+    precision counter)."""
+    sa = jnp.maximum(jnp.max(jnp.abs(a)), 1e-8).astype(jnp.float32) / 127.0
+    sb = jnp.maximum(jnp.max(jnp.abs(b)), 1e-8).astype(jnp.float32) / 127.0
+    aq = jnp.clip(jnp.round(a.astype(jnp.float32) / sa), -127, 127
+                  ).astype(jnp.int8)
+    bq = jnp.clip(jnp.round(b.astype(jnp.float32) / sb), -127, 127
+                  ).astype(jnp.int8)
+    acc, waste = _matmul_pallas(aq, bq, None, activation="none",
+                                out_dtype=jnp.int32, interpret=interpret,
+                                tune={**tune, "precision": "auto"})
+    out = acc.astype(jnp.float32) * (sa * sb)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    out = ref._ACTIVATIONS[activation](out)
+    return out.astype(out_dtype or a.dtype), waste
+
+
+fabric.register_op(
+    "matmul",
+    reference=ref.matmul,
+    pallas=_matmul_pallas,
+    tunables={"block_m": 256, "block_n": 256, "block_k": 512,
+              "precision": "auto"},
+    supported=_matmul_supported,
+    bucket=_matmul_bucket,
+)
+
+
+def mat_mul(a, b, bias=None, *, activation: str = "none", block_m=None,
+            block_n=None, block_k=None, precision=None, out_dtype=None,
+            use_kernel=_UNSET, interpret=_UNSET, fabric=None):
+    """activation(a @ b + bias) for arbitrary (M, K) x (K, N).
+
+    ``precision`` ("auto" | "int8") overrides the tuning table's precision
+    policy for this call; "int8" runs float operands through the MAT
+    fixed-point MAC path (per-tensor symmetric quantization)."""
+    pol = _fabric_mod.legacy_policy("ops.mat_mul", use_kernel, interpret,
+                                    fabric)
+    return _fabric_mod.dispatch(
+        "matmul", a, b, bias, activation=activation, out_dtype=out_dtype,
+        fabric=pol,
+        tune={"block_m": block_m, "block_n": block_n, "block_k": block_k,
+              "precision": precision})
+
+
+# ---------------------------------------------------------------- conv1d --
+def _conv1d_supported(args, kwargs, tune):
+    x, w = args[0], args[1]
+    if w.shape[2] < 128:
+        return False, "cout_lt_128"
+    if x.shape[2] < 8:
+        return False, "cin_lt_8"
+    return True, ""
+
+
+def _conv1d_bucket(args, kwargs):
+    x, w = args[0], args[1]
+    return (f"t{_pb(x.shape[1])}_ci{_pb(x.shape[2])}"
+            f"_co{_pb(w.shape[2])}_k{w.shape[0]}")
+
+
+def _conv1d_pallas(x, w, bias=None, *, stride=1, activation="none",
+                   out_dtype=None, interpret, tune):
+    """'valid' conv over already layout-padded input (see conv1d below)."""
+    ksize = w.shape[0]
+    t_out = (x.shape[1] - ksize) // stride + 1
+    bt = min(tune["block_t"], t_out)
+    t_out_pad = next_multiple(t_out, bt)
+    # pad input so padded T_out is achievable (extra outputs are cropped)
+    t_need = (t_out_pad - 1) * stride + ksize
+    if x.shape[1] < t_need:
+        x = jnp.pad(x, ((0, 0), (0, t_need - x.shape[1]), (0, 0)))
+    cout = w.shape[2]
+    bn = min(tune["block_n"], cout)
+    wp = pad_to_multiple(w, bn, 2)
+    biasp = pad_to_multiple(bias, bn, 0) if bias is not None else None
+    out = _conv1d.conv1d(x, wp, biasp, stride=stride, block_t=bt, block_n=bn,
+                         activation=activation, out_dtype=out_dtype,
+                         interpret=interpret)
+    waste = x.shape[0] * (t_out_pad * wp.shape[2] - t_out * cout)
+    return out[:, :t_out, :cout], waste
+
+
+fabric.register_op(
+    "conv1d",
+    reference=ref.conv1d,
+    pallas=_conv1d_pallas,
+    tunables={"block_t": 256, "block_n": 128},
+    supported=_conv1d_supported,
+    bucket=_conv1d_bucket,
+)
 
 
 def conv1d(x, w, bias=None, *, stride: int = 1, padding: str = "same",
-           activation: str = "none", block_t: int = 256, block_n: int = 128,
-           out_dtype=None, use_kernel: bool = True,
-           interpret: Optional[bool] = None):
+           activation: str = "none", block_t=None, block_n=None,
+           out_dtype=None, use_kernel=_UNSET, interpret=_UNSET, fabric=None):
     """Conv1d over (B, T, Cin) with (K, Cin, Cout) weights."""
+    pol = _fabric_mod.legacy_policy("ops.conv1d", use_kernel, interpret,
+                                    fabric)
     ksize = w.shape[0]
     if padding == "same":
         # 'same' under stride: T_out = ceil(T / stride)
@@ -68,31 +207,16 @@ def conv1d(x, w, bias=None, *, stride: int = 1, padding: str = "same",
                         (0, 0)))
     elif padding != "valid":
         raise ValueError(padding)
-    if not use_kernel or w.shape[2] < 128 or x.shape[2] < 8:
-        return ref.conv1d(x, w, bias, stride=stride, activation=activation,
-                          out_dtype=out_dtype)
-    interpret = _interpret_default() if interpret is None else interpret
-    t_out = (x.shape[1] - ksize) // stride + 1
-    bt = min(block_t, t_out)
-    t_out_pad = next_multiple(t_out, bt)
-    # pad input so padded T_out is achievable (extra outputs are cropped)
-    t_need = (t_out_pad - 1) * stride + ksize
-    if x.shape[1] < t_need:
-        x = jnp.pad(x, ((0, 0), (0, t_need - x.shape[1]), (0, 0)))
-    cout = w.shape[2]
-    bn = min(block_n, cout)
-    wp = pad_to_multiple(w, bn, 2)
-    biasp = pad_to_multiple(bias, bn, 0) if bias is not None else None
-    out = _conv1d.conv1d(x, wp, biasp, stride=stride, block_t=bt, block_n=bn,
-                         activation=activation, out_dtype=out_dtype,
-                         interpret=interpret)
-    return out[:, :t_out, :cout]
+    return _fabric_mod.dispatch(
+        "conv1d", x, w, bias, stride=stride, activation=activation,
+        out_dtype=out_dtype, fabric=pol,
+        tune={"block_t": block_t, "block_n": block_n})
 
 
 def conv1d_stream(x, w, bias=None, carry=None, *, stride: int = 1,
-                  activation: str = "none", block_t: int = 256,
-                  block_n: int = 128, out_dtype=None, use_kernel: bool = True,
-                  interpret: Optional[bool] = None):
+                  activation: str = "none", block_t=None, block_n=None,
+                  out_dtype=None, use_kernel=_UNSET, interpret=_UNSET,
+                  fabric=None):
     """Stateful chunked conv1d over (B, T, Cin); T % stride == 0.
 
     ``carry`` is the (B, K-stride, Cin) tail of the preceding chunks (zeros
@@ -102,6 +226,8 @@ def conv1d_stream(x, w, bias=None, carry=None, *, stride: int = 1,
     under "stream" (left-heavy) padding.  Cost per chunk is O(chunk), not
     O(read-so-far).
     """
+    pol = _fabric_mod.legacy_policy("ops.conv1d_stream", use_kernel,
+                                    interpret, fabric)
     ksize = w.shape[0]
     if x.shape[1] % stride:
         raise ValueError(f"chunk length {x.shape[1]} not a multiple of "
@@ -117,76 +243,165 @@ def conv1d_stream(x, w, bias=None, carry=None, *, stride: int = 1,
     buf = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
     y = conv1d(buf, w, bias, stride=stride, padding="valid",
                activation=activation, block_t=block_t, block_n=block_n,
-               out_dtype=out_dtype, use_kernel=use_kernel,
-               interpret=interpret)
+               out_dtype=out_dtype, fabric=pol)
     new_carry = buf[:, buf.shape[1] - c:, :]
     return y, new_carry
 
 
-def edit_distance(query, target, *, block_p: int = 128,
-                  use_kernel: bool = True, interpret: Optional[bool] = None):
-    """Batched Levenshtein distance; (P, m) x (P, n) -> (P,) i32."""
-    if not use_kernel:
-        return ref.edit_distance(query, target)
-    interpret = _interpret_default() if interpret is None else interpret
+# --------------------------------------------------------- edit distance --
+def _ed_bucket(args, kwargs):
+    q, t = args[0], args[1]
+    return f"p{_pb(q.shape[0])}_m{_pb(q.shape[1])}_n{_pb(t.shape[1])}"
+
+
+def _ed_pallas(query, target, *, interpret, tune):
     p = query.shape[0]
-    bp = min(block_p, next_multiple(p, 8))
+    bp = min(tune["block_p"], next_multiple(p, 8))
     qp = pad_to_multiple(query, bp, 0)
     tp = pad_to_multiple(target, bp, 0)
     out = _ed.levenshtein(qp, tp, block_p=bp, interpret=interpret)
-    return out[:p]
+    return out[:p], qp.shape[0] - p
 
 
-def banded_align(query, target, *, band: int, match: int = 2,
-                 mismatch: int = -4, gap: int = -2, local: bool = False,
-                 block_p: int = 128, use_kernel: bool = True,
-                 interpret: Optional[bool] = None):
-    """Banded NW/SW alignment scores; (P, m) x (P, n) -> (P,) i32."""
-    if not use_kernel:
-        return ref.banded_align(query, target, band=band, match=match,
-                                mismatch=mismatch, gap=gap, local=local)
-    interpret = _interpret_default() if interpret is None else interpret
+fabric.register_op(
+    "edit_distance",
+    reference=ref.edit_distance,
+    pallas=_ed_pallas,
+    tunables={"block_p": 128},
+    bucket=_ed_bucket,
+)
+
+
+def edit_distance(query, target, *, block_p=None, use_kernel=_UNSET,
+                  interpret=_UNSET, fabric=None):
+    """Batched Levenshtein distance; (P, m) x (P, n) -> (P,) i32."""
+    pol = _fabric_mod.legacy_policy("ops.edit_distance", use_kernel,
+                                    interpret, fabric)
+    return _fabric_mod.dispatch("edit_distance", query, target, fabric=pol,
+                                tune={"block_p": block_p})
+
+
+def _banded_bucket(args, kwargs):
+    q, t = args[0], args[1]
+    return (f"p{_pb(q.shape[0])}_m{_pb(q.shape[1])}_n{_pb(t.shape[1])}"
+            f"_b{_pb(kwargs.get('band', 0) or 1)}")
+
+
+def _banded_pallas(query, target, *, band, match=2, mismatch=-4, gap=-2,
+                   local=False, interpret, tune):
     p = query.shape[0]
-    bp = min(block_p, next_multiple(p, 8))
+    bp = min(tune["block_p"], next_multiple(p, 8))
     qp = pad_to_multiple(query, bp, 0)
     tp = pad_to_multiple(target, bp, 0)
     out = _ed.banded_align(qp, tp, band=band, match=match, mismatch=mismatch,
                            gap=gap, local=local, block_p=bp,
                            interpret=interpret)
-    return out[:p]
+    return out[:p], qp.shape[0] - p
+
+
+fabric.register_op(
+    "banded_align",
+    reference=ref.banded_align,
+    pallas=_banded_pallas,
+    tunables={"block_p": 128},
+    bucket=_banded_bucket,
+)
+
+
+def banded_align(query, target, *, band: int, match: int = 2,
+                 mismatch: int = -4, gap: int = -2, local: bool = False,
+                 block_p=None, use_kernel=_UNSET, interpret=_UNSET,
+                 fabric=None):
+    """Banded NW/SW alignment scores; (P, m) x (P, n) -> (P,) i32."""
+    pol = _fabric_mod.legacy_policy("ops.banded_align", use_kernel,
+                                    interpret, fabric)
+    return _fabric_mod.dispatch(
+        "banded_align", query, target, band=band, match=match,
+        mismatch=mismatch, gap=gap, local=local, fabric=pol,
+        tune={"block_p": block_p})
+
+
+# ------------------------------------------------------- flash attention --
+def _fa_supported(args, kwargs, tune):
+    q, k = args[0], args[1]
+    sq, skv = q.shape[2], k.shape[2]
+    bq = min(tune["block_q"], sq)
+    bk = min(tune["block_k"], skv)
+    if sq % bq or skv % bk:
+        return False, "seq_not_divisible"
+    return True, ""
+
+
+def _fa_bucket(args, kwargs):
+    q, k = args[0], args[1]
+    return f"q{_pb(q.shape[2])}_k{_pb(k.shape[2])}_d{_pb(q.shape[3])}"
+
+
+def _fa_pallas(q, k, v, *, causal=True, scale=None, interpret, tune):
+    sq, skv = q.shape[2], k.shape[2]
+    bq = min(tune["block_q"], sq)
+    bk = min(tune["block_k"], skv)
+    out = _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                              block_q=bq, block_k=bk, interpret=interpret)
+    return out, 0
+
+
+fabric.register_op(
+    "flash_attention",
+    reference=ref.attention,
+    pallas=_fa_pallas,
+    tunables={"block_q": 512, "block_k": 512},
+    supported=_fa_supported,
+    bucket=_fa_bucket,
+)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, scale=None,
-                    block_q: int = 512, block_k: int = 512,
-                    use_kernel: bool = True,
-                    interpret: Optional[bool] = None):
+                    block_q=None, block_k=None, use_kernel=_UNSET,
+                    interpret=_UNSET, fabric=None):
     """(B, Hq, Sq, D) x (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
-    if not use_kernel:
-        return ref.attention(q, k, v, causal=causal, scale=scale)
-    interpret = _interpret_default() if interpret is None else interpret
-    sq, skv = q.shape[2], k.shape[2]
-    bq = min(block_q, sq)
-    bk = min(block_k, skv)
-    if sq % bq or skv % bk:
-        return ref.attention(q, k, v, causal=causal, scale=scale)
-    return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
-                               block_q=bq, block_k=bk, interpret=interpret)
+    pol = _fabric_mod.legacy_policy("ops.flash_attention", use_kernel,
+                                    interpret, fabric)
+    return _fabric_mod.dispatch(
+        "flash_attention", q, k, v, causal=causal, scale=scale, fabric=pol,
+        tune={"block_q": block_q, "block_k": block_k})
 
 
-def ssd_scan(x, log_a, b, c, *, chunk: int = 256, use_kernel: bool = True,
-             interpret: Optional[bool] = None):
-    """Mamba-2 SSD over (BH, T, dh); returns y only (training path)."""
-    if not use_kernel:
-        return ref.ssd_scan(x, log_a, b, c)[0]
-    interpret = _interpret_default() if interpret is None else interpret
+# --------------------------------------------------------------- ssd scan --
+def _ssd_bucket(args, kwargs):
+    x, _, b = args[0], args[1], args[2]
+    return f"t{_pb(x.shape[1])}_dh{_pb(x.shape[2])}_ds{_pb(b.shape[2])}"
+
+
+def _ssd_pallas(x, log_a, b, c, *, interpret, tune):
     t = x.shape[1]
-    ck = min(chunk, t)
+    ck = min(tune["chunk"], t)
     if t % ck:
         tp = next_multiple(t, ck)
         x = pad_to_multiple(x, ck, 1)
         log_a = pad_to_multiple(log_a, ck, 1)
         b = pad_to_multiple(b, ck, 1)
         c = pad_to_multiple(c, ck, 1)
-        return _ssd.ssd_scan(x, log_a, b, c, chunk=ck,
-                             interpret=interpret)[:, :t]
-    return _ssd.ssd_scan(x, log_a, b, c, chunk=ck, interpret=interpret)
+        out = _ssd.ssd_scan(x, log_a, b, c, chunk=ck,
+                            interpret=interpret)[:, :t]
+        return out, x.shape[0] * (tp - t) * x.shape[2]
+    return _ssd.ssd_scan(x, log_a, b, c, chunk=ck, interpret=interpret), 0
+
+
+fabric.register_op(
+    "ssd_scan",
+    reference=lambda x, log_a, b, c: ref.ssd_scan(x, log_a, b, c)[0],
+    pallas=_ssd_pallas,
+    tunables={"chunk": 256},
+    bucket=_ssd_bucket,
+)
+
+
+def ssd_scan(x, log_a, b, c, *, chunk=None, use_kernel=_UNSET,
+             interpret=_UNSET, fabric=None):
+    """Mamba-2 SSD over (BH, T, dh); returns y only (training path)."""
+    pol = _fabric_mod.legacy_policy("ops.ssd_scan", use_kernel, interpret,
+                                    fabric)
+    return _fabric_mod.dispatch("ssd_scan", x, log_a, b, c, fabric=pol,
+                                tune={"chunk": chunk})
+

@@ -9,6 +9,11 @@ distributed/sharding.py for why: jax rejects uneven dim shardings such as
 The chunked path is the pure-JAX mirror of kernels/flash_attention.py
 (verified against it in tests): ``lax.map`` over query blocks, ``lax.scan``
 over KV blocks carrying (acc, m, l) — O(S) memory at 32k-500k contexts.
+
+When the compute-fabric policy places ``flash_attention`` on a Pallas
+target (single device, kernel-divisible sequence lengths), the training
+path runs the Pallas kernel instead of either jnp mirror; everything else
+is unchanged.
 """
 from __future__ import annotations
 
@@ -17,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
-from repro.models.layers import head_rmsnorm, rope
+from repro.models.layers import fabric_wants_kernel, head_rmsnorm, rope
 from repro.models.param import ScopedBuilder
 
 
@@ -154,7 +159,36 @@ def attention_block(p, x, cfg: ModelConfig, positions, *, causal=True,
     else:
         q, k, v = _project_qkv(p, x, cfg, positions)
     scale = cfg.head_dim ** -0.5
-    if s >= cfg.chunked_attn_threshold or k.shape[1] >= cfg.chunked_attn_threshold:
+    sq, skv = q.shape[1], k.shape[1]
+    # Kernel-divisibility is checked against the SAME block sizes dispatch
+    # will resolve (tuning table for this shape bucket) and those blocks are
+    # passed explicitly — so the dispatcher can never be forced onto the
+    # O(S^2) oracle fallback, which would defeat the chunked path's O(S)
+    # memory at long context.  A pallas request skipped here is a counted
+    # fallback, not a silent one.
+    take_kernel = False
+    if fabric_wants_kernel("flash_attention"):
+        from repro.kernels import fabric as fabric_mod
+        # ask the dispatcher's own support predicate (with the tuning the
+        # dispatch would resolve) so this guard can never drift from it
+        shaped = (
+            fabric_mod.ShapeProxy((q.shape[0], q.shape[2], sq, q.shape[3])),
+            fabric_mod.ShapeProxy((k.shape[0], k.shape[2], skv, k.shape[3])))
+        tune = fabric_mod.resolved_tuning("flash_attention", shaped)
+        spec = fabric_mod.op_spec("flash_attention")
+        take_kernel, reason = spec.supported(shaped, {}, tune)
+        bq = min(tune["block_q"], sq)
+        bk = min(tune["block_k"], skv)
+        if not take_kernel:
+            fabric_mod.note("flash_attention", "reference", reason)
+    if take_kernel:
+        from repro.kernels import ops
+        out = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, scale=scale,
+            block_q=bq, block_k=bk)
+        out = out.transpose(0, 2, 1, 3)
+    elif s >= cfg.chunked_attn_threshold or k.shape[1] >= cfg.chunked_attn_threshold:
         # chunked path: O(S) memory regardless of head sharding
         out = chunked_attention(q, k, v, causal=causal, scale=scale,
                                 chunk=cfg.attn_chunk)

@@ -1,12 +1,41 @@
-"""Shared neural layers for the architecture zoo (pure JAX)."""
+"""Shared neural layers for the architecture zoo.
+
+Pure JAX by default; the hot matmuls additionally participate in the
+compute fabric: when the active :mod:`repro.kernels.fabric` policy selects
+a Pallas target for ``matmul`` (and no sharding context is active — the
+kernels are single-device), the MLP runs on the MAT GEMM kernel with the
+activation fused into the epilogue.  The default policy keeps the einsum
+path, so placement — not this module — decides where the FLOPs go.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import sharding as shardlib
 from repro.distributed.sharding import shard
+from repro.kernels import fabric as fabric_mod
 from repro.models.config import ModelConfig
 from repro.models.param import ScopedBuilder
+
+
+def fabric_wants_kernel(op: str) -> bool:
+    """True when the ambient fabric policy places ``op`` on a Pallas target
+    *and* the single-device kernel path is usable (no sharding context).
+
+    Every decision is recorded: a pallas request suppressed by an active
+    mesh is a counted fallback, and a reference placement is a counted
+    dispatch (so model-only engines still report fabric telemetry).  When
+    this returns True the subsequent ``ops.*`` call does the counting.
+    """
+    sel = fabric_mod.select(op)
+    if not sel.use_pallas:
+        fabric_mod.note(op, sel.target)
+        return False
+    if shardlib.active() is not None:
+        fabric_mod.note(op, "reference", "sharded")
+        return False
+    return True
 
 _ACT = {
     "silu": jax.nn.silu,
@@ -63,6 +92,19 @@ def init_mlp(b: ScopedBuilder, cfg: ModelConfig):
 
 
 def mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if fabric_wants_kernel("matmul"):
+        # MAT path: (B*S, D) GEMMs with the activation fused into the
+        # kernel epilogue; degenerate shapes fall back inside the dispatcher
+        # (counted, not silent)
+        from repro.kernels import ops
+        b, s, d = x.shape
+        x2 = x.reshape(b * s, d)
+        if cfg.mlp_gated:
+            h = (ops.mat_mul(x2, p["wi_gate"], activation=cfg.activation)
+                 * ops.mat_mul(x2, p["wi"]))
+        else:
+            h = ops.mat_mul(x2, p["wi"], activation=cfg.activation)
+        return ops.mat_mul(h, p["wo"]).reshape(b, s, d)
     act = _ACT[cfg.activation]
     h = jnp.einsum("bsd,df->bsf", x, p["wi"])
     if cfg.mlp_gated:

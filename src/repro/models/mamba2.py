@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
+from repro.models.layers import fabric_wants_kernel
 from repro.models.param import ScopedBuilder
 
 
@@ -122,7 +123,27 @@ def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
         bh_flat, s, ds)
     cf = jnp.broadcast_to(c_in[:, None], (bsz, nh, s, ds)).reshape(
         bh_flat, s, ds)
-    y, s_final = ssd_chunked(xf, la, bf, cf, cfg.ssm_chunk, state0=ssm_state)
+    if ssm_state is None and fabric_wants_kernel("ssd_scan"):
+        # Pallas SSD kernel (y only); the final state — needed for prefill->
+        # decode handoff — has the closed form  sum_t exp(cum_T - cum_t) B_t x_t
+        from repro.kernels import ops
+        y = ops.ssd_scan(xf, la, bf, cf, chunk=cfg.ssm_chunk)
+        cum = jnp.cumsum(la.astype(jnp.float32), axis=1)       # (BH, T)
+        w = jnp.exp(cum[:, -1:] - cum)                         # decay t -> T
+        s_final = jnp.einsum("pls,pld->psd",
+                             bf.astype(jnp.float32) * w[..., None],
+                             xf.astype(jnp.float32))
+    else:
+        if ssm_state is not None:
+            # fabric_wants_kernel was not consulted (the kernel cannot carry
+            # an incoming state) — record the placement so a pallas request
+            # suppressed by state handoff is a counted fallback
+            from repro.kernels import fabric as fabric_mod
+            sel = fabric_mod.select("ssd_scan")
+            fabric_mod.note("ssd_scan", "reference",
+                            "has_state" if sel.use_pallas else None)
+        y, s_final = ssd_chunked(xf, la, bf, cf, cfg.ssm_chunk,
+                                 state0=ssm_state)
     y = y.reshape(bsz, nh, s, dh).transpose(0, 2, 1, 3)
     y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
     y = y.reshape(bsz, s, di)

@@ -14,6 +14,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import fm_index, seed_extend
+from repro.kernels import fabric as fabric_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,11 +62,15 @@ class PrefixMapper:
 
     def __init__(self, panel: TargetPanel,
                  align_cfg: seed_extend.AlignConfig = PREFIX_ALIGN_CFG,
-                 *, interpret=None):
+                 *, interpret=fabric_mod.UNSET, fabric=None):
         self.panel = panel
         self.cfg = align_cfg
         self.index = fm_index.FMIndex.build(panel.reference)
-        self._interpret = interpret
+        # placement for the banded-extension kernel; ``interpret=`` is a
+        # deprecated shim translated into a policy override
+        self._fabric = fabric_mod.legacy_policy("PrefixMapper",
+                                                interpret=interpret,
+                                                fabric=fabric)
 
     def map_prefixes(self, prefixes: np.ndarray) -> MapResult:
         """prefixes: (R, L) called bases (1..4; 0-padded rows are ignored by
@@ -73,7 +78,7 @@ class PrefixMapper:
         kernels compile once."""
         res = seed_extend.align_reads(self.index, self.panel.reference,
                                       np.asarray(prefixes, np.int32),
-                                      self.cfg, interpret=self._interpret)
+                                      self.cfg, fabric=self._fabric)
         pos = np.clip(res.positions, 0, len(self.panel.reference) - 1)
         on_target = np.where(res.accepted, self.panel.target_mask[pos], False)
         return MapResult(mapped=res.accepted, on_target=on_target,

@@ -41,6 +41,7 @@ import numpy as np
 from repro.core import basecaller as bc
 from repro.core import ctc
 from repro.engine.scheduler import SlotScheduler
+from repro.kernels import fabric as fabric_mod
 from repro.engine.telemetry import Telemetry
 from repro.realtime import policy as policy_mod
 from repro.realtime.mapper import PrefixMapper
@@ -53,7 +54,8 @@ class AdaptiveSamplingRuntime:
 
     def __init__(self, params, cfg: bc.BasecallerConfig, mapper: PrefixMapper,
                  policy: PolicyConfig = PolicyConfig(), *, channels: int = 32,
-                 chunk_samples: int = 256, use_kernel: bool = False):
+                 chunk_samples: int = 256, use_kernel=fabric_mod.UNSET,
+                 fabric=None):
         if chunk_samples % cfg.total_stride:
             raise ValueError(
                 f"chunk_samples={chunk_samples} must be a multiple of the "
@@ -64,8 +66,11 @@ class AdaptiveSamplingRuntime:
         self.policy = policy
         self.channels = channels
         self.chunk_samples = chunk_samples
+        # basecall placement: fabric policy (``use_kernel=`` is a shim)
+        self.fabric = fabric_mod.as_policy(fabric_mod.legacy_policy(
+            "AdaptiveSamplingRuntime", use_kernel, fabric=fabric))
         self._apply = functools.partial(bc.apply_stream, cfg=cfg,
-                                        use_kernel=use_kernel)
+                                        fabric=self.fabric)
         self.state = bc.init_stream_state(cfg, channels)
         self.prev_class = jnp.full((channels,), ctc.BLANK, jnp.int32)
         # channel lanes: slot = sensor channel, payload = ChannelSession

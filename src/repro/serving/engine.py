@@ -100,9 +100,11 @@ class BasecallServer:
     def __init__(self, params, bc_cfg, *, batch: int, chunk: int,
                  use_kernel: bool = False):
         _deprecated("BasecallServer", '"basecall"')
+        # old boolean -> fabric target (old default False == reference path)
         self._eng = engine_api.build("basecall", params=params, cfg=bc_cfg,
                                      batch=batch, chunk=chunk,
-                                     use_kernel=use_kernel)
+                                     fabric="pallas" if use_kernel
+                                     else "reference")
 
     @property
     def stats(self) -> _LegacyStatsView:
@@ -119,11 +121,12 @@ class AdaptiveSamplingServer:
                  channels: int = 32, chunk: int = 256, policy=None,
                  align_cfg=None, use_kernel: bool = False, interpret=None):
         _deprecated("AdaptiveSamplingServer", '"adaptive_sampling"')
+        from repro.engine.adaptive import legacy_adaptive_policy
+        pol = legacy_adaptive_policy(use_kernel, interpret)
         self._eng = engine_api.build(
             "adaptive_sampling", params=params, cfg=bc_cfg,
             reference=reference, targets=target_intervals, channels=channels,
-            chunk=chunk, policy=policy, align_cfg=align_cfg,
-            use_kernel=use_kernel, interpret=interpret)
+            chunk=chunk, policy=policy, align_cfg=align_cfg, fabric=pol)
 
     @property
     def runtime(self):

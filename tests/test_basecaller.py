@@ -36,8 +36,8 @@ def test_kernel_path_matches_xla(key, rng):
     cfg = bc.BasecallerConfig()
     params = bc.init(key, cfg)
     sig = jnp.asarray(rng.normal(size=(1, 512)).astype(np.float32))
-    xla = bc.apply(params, sig, cfg, use_kernel=False)
-    kern = bc.apply(params, sig, cfg, use_kernel=True)
+    xla = bc.apply(params, sig, cfg, fabric="reference")
+    kern = bc.apply(params, sig, cfg, fabric="pallas")
     np.testing.assert_allclose(np.asarray(xla), np.asarray(kern),
                                rtol=2e-3, atol=2e-3)
 

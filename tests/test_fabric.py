@@ -1,0 +1,498 @@
+"""Compute-fabric dispatch: policy resolution, parity across the fallback
+boundary for every registered op, deprecation shims, tuning tables, and
+kernel-dispatch telemetry."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import fabric, ops, ref
+
+
+# ------------------------------------------------------ policy resolution --
+class TestPolicy:
+    def test_default_auto_resolves_reference_off_tpu(self):
+        # production default: compiled Pallas on TPU, oracle elsewhere —
+        # interpret mode is an explicit opt-in
+        expected = ("pallas_tpu" if jax.default_backend() == "tpu"
+                    else "reference")
+        assert fabric.resolve_target("matmul") == expected
+
+    def test_use_context_nests_and_restores(self):
+        assert fabric.resolve_target("matmul", None) != "pallas_interpret"
+        with fabric.use("pallas_interpret"):
+            assert fabric.resolve_target("matmul") == "pallas_interpret"
+            with fabric.use("reference"):
+                assert fabric.resolve_target("matmul") == "reference"
+            assert fabric.resolve_target("matmul") == "pallas_interpret"
+        assert fabric.resolve_target("matmul") != "pallas_interpret"
+
+    def test_global_policy(self):
+        prev = fabric.set_policy("pallas_interpret")
+        try:
+            assert fabric.resolve_target("conv1d") == "pallas_interpret"
+        finally:
+            fabric.set_policy(prev)
+
+    def test_per_op_override(self):
+        pol = fabric.FabricPolicy(target="reference").with_op(
+            "edit_distance", "pallas_interpret")
+        assert fabric.resolve_target("matmul", pol) == "reference"
+        assert fabric.resolve_target("edit_distance", pol) == \
+            "pallas_interpret"
+
+    def test_policy_is_hashable_static_arg(self):
+        pol = fabric.FabricPolicy(target="reference")
+        assert hash(pol) == hash(fabric.FabricPolicy(target="reference"))
+        assert pol != pol.with_op("matmul", "pallas_interpret")
+
+    def test_unknown_target_rejected(self):
+        with pytest.raises(ValueError):
+            fabric.FabricPolicy(target="cuda")
+        with pytest.raises(TypeError):
+            fabric.as_policy(123)
+
+    def test_registered_ops(self):
+        assert set(fabric.registered_ops()) >= {
+            "matmul", "conv1d", "edit_distance", "banded_align",
+            "flash_attention", "ssd_scan"}
+
+
+# ------------------------------------------- parity across the boundaries --
+def _assert_close(a, b, tol=2e-4):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+class TestBoundaryParity:
+    """pallas-interpret vs reference at the fallback boundary shapes: one
+    side dispatches the kernel, the other is a counted fallback — both must
+    agree with the oracle."""
+
+    @pytest.mark.parametrize("m", [7, 8])
+    @pytest.mark.parametrize("n", [127, 128])
+    @pytest.mark.parametrize("k", [127, 128])
+    def test_matmul(self, m, n, k):
+        a = jax.random.normal(jax.random.key(0), (m, k), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (k, n), jnp.float32)
+        got = ops.mat_mul(a, b, fabric="pallas_interpret")
+        _assert_close(got, ref.matmul(a, b))
+
+    @pytest.mark.parametrize("cin", [7, 8])
+    @pytest.mark.parametrize("cout", [127, 128])
+    def test_conv1d(self, cin, cout):
+        x = jax.random.normal(jax.random.key(0), (1, 64, cin), jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (3, cin, cout), jnp.float32)
+        got = ops.conv1d(x, w, padding="valid", fabric="pallas_interpret")
+        _assert_close(got, ref.conv1d(x, w))
+
+    @pytest.mark.parametrize("p", [7, 8])
+    def test_edit_distance(self, rng, p):
+        q = jnp.asarray(rng.integers(1, 5, (p, 33)).astype(np.int32))
+        t = jnp.asarray(rng.integers(1, 5, (p, 29)).astype(np.int32))
+        got = ops.edit_distance(q, t, fabric="pallas_interpret")
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref.edit_distance(q, t)))
+
+    @pytest.mark.parametrize("p", [7, 8])
+    def test_banded_align(self, rng, p):
+        q = jnp.asarray(rng.integers(1, 5, (p, 33)).astype(np.int32))
+        t = jnp.asarray(rng.integers(1, 5, (p, 29)).astype(np.int32))
+        got = ops.banded_align(q, t, band=8, local=True,
+                               fabric="pallas_interpret")
+        want = ref.banded_align(q, t, band=8, local=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("sq", [64, 128])
+    def test_flash_attention(self, sq):
+        q = jax.random.normal(jax.random.key(0), (1, 2, sq, 32), jnp.float32)
+        k = jax.random.normal(jax.random.key(1), (1, 2, 128, 32), jnp.float32)
+        v = jax.random.normal(jax.random.key(2), (1, 2, 128, 32), jnp.float32)
+        got = ops.flash_attention(q, k, v, causal=True,
+                                  fabric="pallas_interpret")
+        _assert_close(got, ref.attention(q, k, v, causal=True), tol=2e-4)
+
+    @pytest.mark.parametrize("t", [100, 128])
+    def test_ssd_scan(self, t):
+        bh, dh, ds = 2, 8, 16
+        x = jax.random.normal(jax.random.key(0), (bh, t, dh)) * 0.5
+        la = -jax.nn.softplus(jax.random.normal(jax.random.key(1), (bh, t)))
+        b = jax.random.normal(jax.random.key(2), (bh, t, ds)) * 0.3
+        c = jax.random.normal(jax.random.key(3), (bh, t, ds)) * 0.3
+        got = ops.ssd_scan(x, la, b, c, chunk=64, fabric="pallas_interpret")
+        _assert_close(got, ref.ssd_scan(x, la, b, c)[0])
+
+
+# -------------------------------------------------------- counted fallbacks --
+class TestDispatchCounters:
+    def test_fallback_reason_counted(self):
+        a = jax.random.normal(jax.random.key(0), (4, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+        base = fabric.counters()
+        ops.mat_mul(a, b, fabric="pallas_interpret")
+        delta = fabric.counters_delta(base)
+        assert delta.get("fabric.fallback.matmul.m_lt_8") == 1
+        assert delta.get("fabric.dispatch.matmul.reference") == 1
+
+    def test_dispatch_target_counted(self):
+        a = jax.random.normal(jax.random.key(0), (8, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+        base = fabric.counters()
+        ops.mat_mul(a, b, fabric="pallas_interpret")
+        ops.mat_mul(a, b, fabric="reference")
+        delta = fabric.counters_delta(base)
+        assert delta.get("fabric.dispatch.matmul.pallas_interpret") == 1
+        assert delta.get("fabric.dispatch.matmul.reference") == 1
+
+    def test_jit_counts_every_execution(self):
+        # decisions are counted at execution time (debug.callback), so a
+        # cached jit trace still counts — cache reuse is not a blind spot
+        a = jax.random.normal(jax.random.key(0), (8, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+        f = jax.jit(lambda x, y: ops.mat_mul(x, y, fabric="reference"))
+        f(a, b).block_until_ready()  # compile once
+        base = fabric.counters()
+        for _ in range(3):
+            f(a, b).block_until_ready()
+        delta = fabric.counters_delta(base)
+        assert delta.get("fabric.dispatch.matmul.reference") == 3
+
+    def test_pad_waste_counted(self):
+        q = jnp.ones((7, 16), jnp.int32)  # pads P 7 -> 8
+        base = fabric.counters()
+        ops.edit_distance(q, q, fabric="pallas_interpret")
+        delta = fabric.counters_delta(base)
+        assert delta.get("fabric.pad_waste_elems.edit_distance") == 1
+
+
+# ------------------------------------------------------- deprecation shims --
+class TestLegacyShims:
+    """use_kernel=/interpret= still work, warn, and match the new API
+    bit-for-bit."""
+
+    def _pair(self, op_call, legacy_kwargs, fabric_target):
+        with pytest.warns(DeprecationWarning):
+            old = op_call(**legacy_kwargs)
+        new = op_call(fabric=fabric_target)
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    def test_matmul_shims(self):
+        a = jax.random.normal(jax.random.key(0), (16, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+        call = lambda **kw: ops.mat_mul(a, b, **kw)  # noqa: E731
+        self._pair(call, {"use_kernel": False}, "reference")
+        self._pair(call, {"use_kernel": True, "interpret": True},
+                   "pallas_interpret")
+        self._pair(call, {"interpret": True}, "pallas_interpret")
+        # use_kernel=True with interpret unset == backend-appropriate pallas
+        self._pair(call, {"use_kernel": True}, "pallas")
+
+    def test_conv1d_shims(self):
+        x = jax.random.normal(jax.random.key(0), (1, 64, 8), jnp.float32)
+        w = jax.random.normal(jax.random.key(1), (3, 8, 128), jnp.float32)
+        call = lambda **kw: ops.conv1d(x, w, **kw)  # noqa: E731
+        self._pair(call, {"use_kernel": False}, "reference")
+        self._pair(call, {"use_kernel": True, "interpret": True},
+                   "pallas_interpret")
+
+    def test_edit_distance_shims(self, rng):
+        q = jnp.asarray(rng.integers(1, 5, (8, 20)).astype(np.int32))
+        t = jnp.asarray(rng.integers(1, 5, (8, 24)).astype(np.int32))
+        call = lambda **kw: ops.edit_distance(q, t, **kw)  # noqa: E731
+        self._pair(call, {"use_kernel": False}, "reference")
+        self._pair(call, {"interpret": True}, "pallas_interpret")
+
+    def test_banded_align_shims(self, rng):
+        q = jnp.asarray(rng.integers(1, 5, (8, 20)).astype(np.int32))
+        t = jnp.asarray(rng.integers(1, 5, (8, 24)).astype(np.int32))
+        call = lambda **kw: ops.banded_align(q, t, band=8, **kw)  # noqa: E731
+        self._pair(call, {"use_kernel": False}, "reference")
+        self._pair(call, {"interpret": True}, "pallas_interpret")
+
+    def test_flash_attention_shims(self):
+        q = jax.random.normal(jax.random.key(0), (1, 2, 64, 32), jnp.float32)
+        call = lambda **kw: ops.flash_attention(q, q, q, **kw)  # noqa: E731
+        self._pair(call, {"use_kernel": False}, "reference")
+        self._pair(call, {"interpret": True}, "pallas_interpret")
+
+    def test_ssd_scan_shims(self):
+        x = jax.random.normal(jax.random.key(0), (2, 64, 8)) * 0.5
+        la = -jax.nn.softplus(jax.random.normal(jax.random.key(1), (2, 64)))
+        b = jax.random.normal(jax.random.key(2), (2, 64, 16)) * 0.3
+        call = lambda **kw: ops.ssd_scan(x, la, b, b, **kw)  # noqa: E731
+        self._pair(call, {"use_kernel": False}, "reference")
+        self._pair(call, {"interpret": True}, "pallas_interpret")
+
+    def test_shim_outranks_per_op_policy(self):
+        # the old kwargs applied unconditionally to the call they were
+        # passed to: a surrounding per-op override must not resurrect the
+        # kernel path under use_kernel=False
+        a = jax.random.normal(jax.random.key(0), (16, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+        pol = fabric.FabricPolicy(per_op=(("matmul", "pallas_interpret"),))
+        prev = fabric.set_policy(pol)
+        try:
+            base = fabric.counters()
+            with pytest.warns(DeprecationWarning):
+                ops.mat_mul(a, b, use_kernel=False)
+            delta = fabric.counters_delta(base)
+            assert delta.get("fabric.dispatch.matmul.reference") == 1
+            assert "fabric.dispatch.matmul.pallas_interpret" not in delta
+        finally:
+            fabric.set_policy(prev)
+
+    def test_basecaller_shim(self, rng):
+        from repro.core import basecaller as bc
+        cfg = bc.BasecallerConfig()
+        params = bc.init(jax.random.key(0), cfg)
+        sig = jnp.asarray(rng.normal(size=(1, 256)).astype(np.float32))
+        with pytest.warns(DeprecationWarning):
+            old = bc.apply(params, sig, cfg, use_kernel=False)
+        new = bc.apply(params, sig, cfg, fabric="reference")
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    def test_variant_caller_shim(self, rng):
+        from repro.core import variant_caller as vc
+        cfg = vc.CallerConfig()
+        params = vc.init(jax.random.key(0), cfg)
+        wins = jnp.asarray(rng.normal(
+            size=(8, cfg.window, vc.N_FEATURES)).astype(np.float32))
+        with pytest.warns(DeprecationWarning):
+            old = vc.apply(params, wins, cfg, use_kernel=False)
+        new = vc.apply(params, wins, cfg, fabric="reference")
+        for o, n in zip(old, new):
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(n))
+
+
+# ------------------------------------------------------------ tuning table --
+class TestTuning:
+    def test_pow2_bucket(self):
+        assert fabric.pow2_bucket(1) == 8
+        assert fabric.pow2_bucket(8) == 8
+        assert fabric.pow2_bucket(9) == 16
+        assert fabric.pow2_bucket(300) == 512
+
+    def test_default_table_loads_and_has_every_op(self):
+        table = fabric.tuning_table("default")
+        for op in fabric.registered_ops():
+            assert op in table, f"tuning_default.json missing {op}"
+            assert "default" in table[op]
+
+    def test_resolution_order(self, tmp_path):
+        # op defaults < table default bucket < table shape bucket < per-call
+        path = tmp_path / "t.json"
+        path.write_text(
+            '{"matmul": {"default": {"block_m": 64},'
+            ' "m8_n128_k128": {"block_m": 32}}}')
+        fabric.load_tuning(str(path), name="test-table")
+        assert fabric.tuning_params("matmul", None, "test-table")[
+            "block_m"] == 64
+        assert fabric.tuning_params("matmul", "m8_n128_k128", "test-table")[
+            "block_m"] == 32
+        # untouched params keep the op defaults
+        assert fabric.tuning_params("matmul", None, "test-table")[
+            "block_k"] == 512
+
+    def test_unknown_table_raises(self):
+        with pytest.raises(KeyError):
+            fabric.tuning_table("nope")
+
+    def test_int8_precision_policy(self):
+        # "int8" quantizes float operands onto the fixed-point MAC path:
+        # result equals the quantized reference product exactly, and the
+        # precision decision is a counter
+        a = jax.random.normal(jax.random.key(0), (16, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+        sa = float(jnp.max(jnp.abs(a))) / 127.0
+        sb = float(jnp.max(jnp.abs(b))) / 127.0
+        aq = jnp.clip(jnp.round(a / sa), -127, 127).astype(jnp.int8)
+        bq = jnp.clip(jnp.round(b / sb), -127, 127).astype(jnp.int8)
+        want = np.asarray(ref.matmul(aq, bq), np.float32) * (sa * sb)
+        base = fabric.counters()
+        got = ops.mat_mul(a, b, precision="int8", fabric="pallas_interpret")
+        delta = fabric.counters_delta(base)
+        assert delta.get("fabric.precision.matmul.int8") == 1
+        _assert_close(got, want, tol=1e-5)
+        # ...and it is a usable approximation of the float product (K=128
+        # accumulation: per-element quantization error ~1-2% relative)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(
+            ref.matmul(a, b)), rtol=0.15, atol=0.5)
+
+    def test_int8_precision_from_tuning_table(self, tmp_path):
+        path = tmp_path / "int8.json"
+        path.write_text('{"matmul": {"default": {"precision": "int8"}}}')
+        fabric.load_tuning(str(path), name="int8-table")
+        a = jax.random.normal(jax.random.key(0), (16, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+        pol = fabric.FabricPolicy(target="pallas_interpret",
+                                  tuning="int8-table")
+        base = fabric.counters()
+        ops.mat_mul(a, b, fabric=pol)
+        assert fabric.counters_delta(base).get(
+            "fabric.precision.matmul.int8") == 1
+
+    def test_per_call_override_wins(self):
+        a = jax.random.normal(jax.random.key(0), (16, 128), jnp.float32)
+        b = jax.random.normal(jax.random.key(1), (128, 128), jnp.float32)
+        out = ops.mat_mul(a, b, block_m=8, block_n=128, block_k=128,
+                          fabric="pallas_interpret")
+        _assert_close(out, ref.matmul(a, b))
+
+
+# -------------------------------------------------- engine + models routes --
+class TestEngineFabric:
+    def test_build_with_fabric_and_telemetry_counters(self, rng):
+        import repro.engine as engine_api
+        chunks = rng.normal(size=(6, 512)).astype(np.float32)
+        eng_ref = engine_api.build("basecall", preset="smoke", seed=0,
+                                   fabric="reference")
+        eng_kern = engine_api.build("basecall", preset="smoke", seed=0,
+                                    fabric="pallas_interpret")
+        reads_ref = eng_ref.serve(chunks)
+        reads_kern = eng_kern.serve(chunks)
+        assert len(reads_ref) == len(reads_kern) == 6
+        for a, b in zip(reads_ref, reads_kern):
+            np.testing.assert_array_equal(a, b)
+        # any engine run reports nonzero kernel-dispatch counters
+        for eng, target in ((eng_ref, "reference"),
+                            (eng_kern, "pallas_interpret")):
+            summ = eng.telemetry.summary()
+            dispatched = sum(v for k, v in summ.items()
+                             if k.startswith(f"fabric.dispatch.conv1d."))
+            assert dispatched > 0, summ
+
+    def test_adaptive_engine_legacy_kwargs_stay_per_stage(self):
+        # old API: use_kernel placed only the basecall CNN; interpret placed
+        # the mapper's banded_align (always a kernel) — the shim must not
+        # collapse them into one global target
+        import repro.engine as engine_api
+        with pytest.warns(DeprecationWarning):
+            eng = engine_api.build("adaptive_sampling", preset="smoke",
+                                   interpret=True)
+        assert fabric.resolve_target("conv1d", eng.fabric) == "reference"
+        assert fabric.resolve_target("banded_align", eng.fabric) == \
+            "pallas_interpret"
+        with pytest.warns(DeprecationWarning):
+            eng2 = engine_api.build("adaptive_sampling", preset="smoke",
+                                    use_kernel=False)
+        # interpret unset -> mapper keeps its kernel placement
+        assert fabric.resolve_target("banded_align", eng2.fabric) in (
+            "pallas_tpu", "pallas_interpret")
+        assert fabric.resolve_target("conv1d", eng2.fabric) == "reference"
+
+    def test_lm_engine_reports_fabric_counters(self):
+        # model-only engines count reference placements too — a run under
+        # the default policy is still visible in the dispatch telemetry
+        import repro.engine as engine_api
+        from repro.engine.lm import Request
+        rng = np.random.default_rng(0)
+        eng = engine_api.build("lm_decode", preset="smoke")
+        eng.submit(Request(uid=0, prompt=rng.integers(1, 32, 3),
+                           max_new_tokens=2))
+        report = eng.drain()
+        dispatched = sum(v for k, v in report.items()
+                         if k.startswith("fabric.dispatch.matmul."))
+        assert dispatched > 0, report
+
+    def test_mlp_fabric_parity(self):
+        from repro.models import layers as L
+        from repro.models.config import ModelConfig
+        cfg = ModelConfig(name="t", family="transformer", num_layers=1,
+                          d_model=128, num_heads=4, num_kv_heads=4,
+                          d_ff=256, vocab_size=64)
+        p = {"wi": jax.random.normal(jax.random.key(0), (128, 256)),
+             "wi_gate": jax.random.normal(jax.random.key(1), (128, 256)),
+             "wo": jax.random.normal(jax.random.key(2), (256, 128))}
+        x = jax.random.normal(jax.random.key(3), (2, 16, 128))
+        want = L.mlp(p, x, cfg)
+        with fabric.use("pallas_interpret"):
+            got = L.mlp(p, x, cfg)
+        _assert_close(got, want)
+
+    def test_attention_fabric_parity(self, key):
+        from repro.models import attention as A
+        from repro.models.config import ModelConfig
+        from repro.models.param import ParamBuilder
+        cfg = ModelConfig(name="t", family="transformer", num_layers=1,
+                          d_model=128, num_heads=4, num_kv_heads=4,
+                          d_ff=256, vocab_size=64)
+        pb = ParamBuilder(key, dtype=jnp.float32)
+        A.init_attention(pb.scope("attn"), cfg)
+        params = pb.params["attn"]
+        x = jax.random.normal(jax.random.key(1), (1, 64, 128))
+        pos = jnp.broadcast_to(jnp.arange(64)[None], (1, 64))
+        want = A.attention_block(params, x, cfg, pos)
+        with fabric.use("pallas_interpret"):
+            got = A.attention_block(params, x, cfg, pos)
+        _assert_close(got, want, tol=2e-3)
+
+    def test_attention_non_divisible_is_counted_not_oom(self, key, tmp_path):
+        # a tuning table whose blocks don't divide the sequence must push
+        # attention back onto the jnp paths (O(S) chunked / full) with a
+        # counted fallback — never onto the O(S^2) oracle via dispatch
+        from repro.models import attention as A
+        from repro.models.config import ModelConfig
+        from repro.models.param import ParamBuilder
+        path = tmp_path / "odd.json"
+        path.write_text('{"flash_attention": {"default": '
+                        '{"block_q": 48, "block_k": 48}}}')
+        fabric.load_tuning(str(path), name="odd-blocks")
+        cfg = ModelConfig(name="t", family="transformer", num_layers=1,
+                          d_model=128, num_heads=4, num_kv_heads=4,
+                          d_ff=256, vocab_size=64)
+        pb = ParamBuilder(key, dtype=jnp.float32)
+        A.init_attention(pb.scope("attn"), cfg)
+        params = pb.params["attn"]
+        x = jax.random.normal(jax.random.key(1), (1, 64, 128))
+        pos = jnp.broadcast_to(jnp.arange(64)[None], (1, 64))
+        want = A.attention_block(params, x, cfg, pos)
+        base = fabric.counters()
+        pol = fabric.FabricPolicy(target="pallas_interpret",
+                                  tuning="odd-blocks")
+        with fabric.use(pol):
+            got = A.attention_block(params, x, cfg, pos)  # 64 % 48 != 0
+        delta = fabric.counters_delta(base)
+        assert delta.get(
+            "fabric.fallback.flash_attention.seq_not_divisible") == 1
+        _assert_close(got, want, tol=2e-4)
+
+    def test_mamba_state_suppression_is_counted(self, key):
+        from repro.models import mamba2 as M
+        from repro.models.config import ModelConfig
+        from repro.models.param import ParamBuilder
+        cfg = ModelConfig(name="t", family="mamba2", num_layers=1,
+                          d_model=64, num_heads=4, num_kv_heads=4,
+                          d_ff=128, vocab_size=64, ssm_state=16,
+                          ssm_head_dim=16)
+        pb = ParamBuilder(key, dtype=jnp.float32)
+        M.init_mamba(pb.scope("ssm"), cfg)
+        params = pb.params["ssm"]
+        x = jax.random.normal(jax.random.key(1), (1, 64, 64)) * 0.3
+        state0 = jnp.zeros((1 * cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), jnp.float32)
+        base = fabric.counters()
+        with fabric.use("pallas_interpret"):
+            M.mamba_block(params, x, cfg, ssm_state=state0)
+        delta = fabric.counters_delta(base)
+        assert delta.get("fabric.fallback.ssd_scan.has_state") == 1
+        assert delta.get("fabric.dispatch.ssd_scan.reference") == 1
+
+    def test_mamba_fabric_parity(self, key):
+        from repro.models import mamba2 as M
+        from repro.models.config import ModelConfig
+        from repro.models.param import ParamBuilder
+        cfg = ModelConfig(name="t", family="mamba2", num_layers=1,
+                          d_model=64, num_heads=4, num_kv_heads=4,
+                          d_ff=128, vocab_size=64, ssm_state=16,
+                          ssm_head_dim=16)
+        pb = ParamBuilder(key, dtype=jnp.float32)
+        M.init_mamba(pb.scope("ssm"), cfg)
+        params = pb.params["ssm"]
+        x = jax.random.normal(jax.random.key(1), (1, 64, 64)) * 0.3
+        want, (_, s_want) = M.mamba_block(params, x, cfg)
+        with fabric.use("pallas_interpret"):
+            got, (_, s_got) = M.mamba_block(params, x, cfg)
+        _assert_close(got, want, tol=2e-3)
+        _assert_close(s_got, s_want, tol=2e-3)

@@ -4,7 +4,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import fabric, ops, ref
+
+
+@pytest.fixture(autouse=True)
+def _interpret_kernels():
+    # pin the Pallas kernels (interpret mode) for every op in this module —
+    # the default fabric policy on CPU would route to the oracle itself
+    with fabric.use("pallas_interpret"):
+        yield
 
 
 class TestMatmul:

@@ -22,13 +22,13 @@ class TestStreamingConv:
         w = jax.random.normal(jax.random.fold_in(k, 1), (ksize, cin, cout))
         b = jax.random.normal(jax.random.fold_in(k, 2), (cout,))
         whole, _ = ops.conv1d_stream(x, w, b, None, stride=stride,
-                                     activation="relu", use_kernel=False)
+                                     activation="relu", fabric="reference")
         carry = None
         outs = []
         for lo, hi in ((0, 16), (16, 20), (20, 48)):
             y, carry = ops.conv1d_stream(x[:, lo:hi], w, b, carry,
                                          stride=stride, activation="relu",
-                                         use_kernel=False)
+                                         fabric="reference")
             outs.append(y)
         np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
                                    np.asarray(whole), atol=1e-6)
@@ -39,13 +39,13 @@ class TestStreamingConv:
         x = jax.random.normal(k, (1, 32, 8))
         w = jax.random.normal(jax.random.fold_in(k, 1), (3, 8, 128))
         ref_y, _ = ops.conv1d_stream(x, w, None, None, stride=2,
-                                     use_kernel=False)
+                                     fabric="reference")
         carry = None
         outs = []
         for lo, hi in ((0, 16), (16, 32)):
             y, carry = ops.conv1d_stream(x[:, lo:hi], w, None, carry,
-                                         stride=2, use_kernel=True,
-                                         interpret=True)
+                                         stride=2,
+                                         fabric="pallas_interpret")
             outs.append(y)
         np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
                                    np.asarray(ref_y), atol=1e-5)
