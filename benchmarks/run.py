@@ -17,6 +17,10 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
                          re-running the CNN over the growing read)
   bench_kernel_dispatch  compute fabric: per-op throughput on each execution
                          target + dispatch/fallback counter deltas
+  bench_quant            repro.quant: read accuracy + throughput + modeled
+                         SoC energy per precision (fp32 / bf16 / int8) on a
+                         fixed-seed micro basecaller — the CI quant-parity
+                         artifact and analysis/report.py --section quant
 """
 from __future__ import annotations
 
@@ -263,6 +267,71 @@ def bench_kernel_dispatch():
                 f";calls_per_s={1e6 / max(us, 1e-9):.1f}")
 
 
+def bench_quant():
+    """Accuracy vs energy across precisions: calibrate once, quantize once,
+    compare read accuracy / host throughput / modeled SoC MAC energy of
+    fp32 vs bf16 vs stored-int8 on fixed seeds."""
+    import dataclasses
+
+    from repro import quant
+    from repro.core import basecaller as bc
+    from repro.core import ctc
+    from repro.core.soc_model import SoCModel
+    from repro.data import nanopore
+    from repro.kernels import ref
+    from repro.train.micro_basecaller import DEMO_PORE, train_micro_basecaller
+    from repro.utils.tree import tree_cast
+
+    cfg, params = train_micro_basecaller(steps=300, seed=0)
+    rng = np.random.default_rng(123)
+    eval_batch = nanopore.make_ctc_batch(rng, batch=32, seq_len=40,
+                                         pm=DEMO_PORE)
+    signal = jnp.asarray(eval_batch["signal"])
+    spad = jnp.asarray(eval_batch["signal_paddings"])
+    labels = jnp.asarray(eval_batch["labels"])
+    label_lens = jnp.asarray(
+        (1.0 - eval_batch["label_paddings"]).sum(axis=1).astype(np.int32))
+    # calibration stream: held-out simulated chunks (never the eval reads)
+    calib = [nanopore.make_ctc_batch(rng, batch=4, seq_len=40,
+                                     pm=DEMO_PORE)["signal"]
+             for _ in range(4)]
+
+    def read_accuracy(pv, cfgv):
+        logits = bc.apply(pv, signal, cfgv)
+        lp = spad[:, :: cfgv.total_stride][:, : logits.shape[1]]
+        tokens, lens = ctc.greedy_decode(logits, lp)
+        dists = ref.edit_distance(tokens, labels, q_len=lens,
+                                  t_len=label_lens)
+        per_read = 1.0 - np.asarray(dists) / np.maximum(
+            np.asarray(label_lens), 1)
+        return float(per_read.mean())
+
+    variants = {
+        "fp32": (params, cfg),
+        "bf16": (tree_cast(params, jnp.bfloat16),
+                 dataclasses.replace(cfg, dtype=jnp.bfloat16)),
+        "int8": (bc.quantize(params, cfg, chunks=calib,
+                             observer="percentile", pct=99.9), cfg),
+    }
+    soc = SoCModel(bc_cfg=cfg, samples_per_base=DEMO_PORE.mean_dwell)
+    samples = int(signal.size)
+    bases = samples / DEMO_PORE.mean_dwell
+    acc_fp32 = None
+    for name, (pv, cfgv) in variants.items():
+        us, _ = timeit(lambda: bc.apply(pv, signal, cfgv), n=3, warmup=1)
+        acc = read_accuracy(pv, cfgv)
+        if acc_fp32 is None:
+            acc_fp32 = acc
+        precision = quant.params_precision(pv)
+        energy_j = soc.basecall_energy_j(samples, precision)
+        row(f"quant:{name}", us,
+            f"read_acc={acc:.4f};acc_delta_vs_fp32={acc - acc_fp32:+.4f}"
+            f";host_bases_per_s={bases / (us / 1e6):.0f}"
+            f";soc_pj_per_base={energy_j / bases * 1e12:.1f}"
+            f";energy_ratio_vs_fp32="
+            f"{soc.mac_energy_j('fp32') / soc.mac_energy_j(precision):.1f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -287,6 +356,7 @@ def main() -> None:
         "roofline": bench_roofline,
         "kernel_dispatch": bench_kernel_dispatch,
         "adaptive": bench_adaptive,
+        "quant": bench_quant,
     }
     if args.only:
         selected = [n.strip() for n in args.only.split(",")]
@@ -295,8 +365,9 @@ def main() -> None:
             ap.error(f"unknown benches {unknown}; available: "
                      f"{sorted(benches)}")
     else:
+        # adaptive and quant both train a micro basecaller — skipped in smoke
         selected = [n for n in benches
-                    if n != "adaptive" or not args.smoke]
+                    if n not in ("adaptive", "quant") or not args.smoke]
 
     print("name,us_per_call,derived")
     for name in selected:

@@ -53,7 +53,10 @@ def _grid(**axes):
 
 # One entry per op: shape cases (op args for bucketing + a thunk factory)
 # and the candidate tunables swept per case.  ``quick`` trims both.
-def _cases(quick: bool):
+# ``int8`` adds the MAC precision policy to the matmul/conv1d sweeps, so a
+# bucket can learn precision="int8" where the fixed-point path wins.
+def _cases(quick: bool, int8: bool = False):
+    precisions = ["auto", "int8"] if int8 else ["auto"]
     key = jax.random.key
     rng = np.random.default_rng(0)
 
@@ -105,9 +108,10 @@ def _cases(quick: bool):
         return {
             "matmul": ([matmul_case(256, 256, 256)],
                        _grid(block_m=[128, 256], block_n=[128, 256],
-                             block_k=[128, 256])),
+                             block_k=[128, 256], precision=precisions)),
             "conv1d": ([conv_case(512, 64, 128, 5)],
-                       _grid(block_t=[64, 128, 256], block_n=[128])),
+                       _grid(block_t=[64, 128, 256], block_n=[128],
+                             precision=precisions)),
             "edit_distance": ([ed_case(32, 64, 64)],
                               _grid(block_p=[8, 16, 32])),
             "banded_align": ([banded_case(32, 64, 64, 16)],
@@ -122,9 +126,10 @@ def _cases(quick: bool):
         "matmul": ([matmul_case(256, 256, 256), matmul_case(512, 512, 512),
                     matmul_case(1024, 256, 1024)],
                    _grid(block_m=[128, 256, 512], block_n=[128, 256, 512],
-                         block_k=[128, 256, 512])),
+                         block_k=[128, 256, 512], precision=precisions)),
         "conv1d": ([conv_case(512, 64, 128, 5), conv_case(2048, 64, 192, 9)],
-                   _grid(block_t=[64, 128, 256, 512], block_n=[128, 256])),
+                   _grid(block_t=[64, 128, 256, 512], block_n=[128, 256],
+                         precision=precisions)),
         "edit_distance": ([ed_case(32, 64, 64), ed_case(128, 100, 100)],
                           _grid(block_p=[8, 16, 32, 64, 128])),
         "banded_align": ([banded_case(32, 64, 64, 16),
@@ -138,9 +143,10 @@ def _cases(quick: bool):
     }
 
 
-def tune(target: str, quick: bool, n: int, warmup: int) -> dict:
+def tune(target: str, quick: bool, n: int, warmup: int,
+         int8: bool = False) -> dict:
     table: dict = {}
-    for op, (cases, grid) in _cases(quick).items():
+    for op, (cases, grid) in _cases(quick, int8).items():
         spec = fabric.op_spec(op)
         grid = list(grid)
         table[op] = {"default": dict(spec.tunables)}
@@ -175,17 +181,24 @@ def main() -> None:
                     help="execution target to tune for")
     ap.add_argument("--quick", action="store_true",
                     help="small sweep (the checked-in default table)")
+    ap.add_argument("--int8", action="store_true",
+                    help="also sweep the int8 MAC precision policy for "
+                         "matmul/conv1d buckets (accuracy-affecting: a "
+                         "bucket that learns precision=\"int8\" quantizes "
+                         "float operands — review the table before "
+                         "checking it in)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: print to stdout)")
     ap.add_argument("-n", type=int, default=3, help="timed reps per combo")
     ap.add_argument("--warmup", type=int, default=1)
     args = ap.parse_args()
 
-    table = tune(args.target, args.quick, args.n, args.warmup)
+    table = tune(args.target, args.quick, args.n, args.warmup, args.int8)
     table["_meta"] = {
         "target": args.target,
         "backend": jax.default_backend(),
         "quick": args.quick,
+        "int8_swept": args.int8,
         "generator": "benchmarks/tune_kernels.py",
     }
     text = json.dumps(table, indent=2, sort_keys=True)

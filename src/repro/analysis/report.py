@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.analysis.report \
       --single dryrun_report.json --multi dryrun_report_multi.json
+
+The accuracy-vs-energy quantization table renders the rows
+``benchmarks/run.py --only quant --json BENCH_quant.json`` produces:
+
+  PYTHONPATH=src python -m repro.analysis.report --section quant \
+      --quant BENCH_quant.json
 """
 from __future__ import annotations
 
@@ -105,13 +111,60 @@ def _ndev(mesh: str) -> int:
     return n
 
 
+def _parse_derived(derived: str) -> dict:
+    """``k1=v1;k2=v2`` benchmark derived-column -> dict of strings."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def quant_table(rows: list[dict]) -> str:
+    """Accuracy-vs-energy table from ``quant:*`` benchmark rows: the
+    fp32 / bf16 / int8 trade the edge deployment decides on (fixed seeds,
+    read accuracy deltas against fp32, SoC-modeled MAC energy)."""
+    lines = [
+        "| precision | read acc | Δacc vs fp32 | host bases/s "
+        "| modeled pJ/base | energy vs fp32 |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r["name"].startswith("quant:"):
+            continue
+        d = _parse_derived(r["derived"])
+        precision = r["name"].split(":", 1)[1]
+        lines.append(
+            f"| {precision} | {d.get('read_acc', '—')} "
+            f"| {d.get('acc_delta_vs_fp32', '—')} "
+            f"| {d.get('host_bases_per_s', '—')} "
+            f"| {d.get('soc_pj_per_base', '—')} "
+            f"| {d.get('energy_ratio_vs_fp32', '—')}x |")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--single", default="dryrun_report.json")
     ap.add_argument("--multi", default="dryrun_report_multi.json")
+    ap.add_argument("--quant", default="BENCH_quant.json",
+                    help="rows from benchmarks/run.py --only quant --json")
     ap.add_argument("--section", default="all",
-                    choices=["all", "dryrun", "roofline", "fractions"])
+                    choices=["all", "dryrun", "roofline", "fractions",
+                             "quant"])
     args = ap.parse_args()
+    if args.section == "quant":
+        try:
+            with open(args.quant) as f:
+                rows = json.load(f)
+        except FileNotFoundError:
+            raise SystemExit(
+                f"{args.quant} not found — generate it first with "
+                "`benchmarks/run.py --only quant --json BENCH_quant.json`")
+        print("### Quantization — accuracy vs energy (fixed seeds)\n")
+        print(quant_table(rows))
+        return
     with open(args.single) as f:
         single = json.load(f)
     try:
@@ -130,6 +183,13 @@ def main() -> None:
     if args.section in ("all", "fractions"):
         print("\n### Roofline fractions\n")
         print(fraction_summary(single))
+    if args.section == "all":
+        try:
+            with open(args.quant) as f:
+                print("\n### Quantization — accuracy vs energy\n")
+                print(quant_table(json.load(f)))
+        except FileNotFoundError:
+            pass
 
 
 if __name__ == "__main__":

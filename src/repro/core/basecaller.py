@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.kernels import fabric as fabric_mod
 from repro.kernels import ops
+from repro.quant import core as qcore
 
 NUM_CLASSES = 5  # blank + ACGT
 
@@ -117,6 +118,24 @@ def apply(params, signal: jax.Array, cfg: BasecallerConfig = BasecallerConfig(),
     return _apply_jit(params, signal, cfg=cfg, fabric=pol)
 
 
+def _conv1x1_as_matmul(x, w, b, activation, fabric):
+    """A k=1/stride=1 conv IS a GEMM: route the head layer through the MAT
+    matmul path so it shares the matmul tuning table, precision policy and
+    int8 counters (on quantized params the CNN then exercises *both*
+    ``fabric.precision.conv1d.int8`` and ``fabric.precision.matmul.int8``).
+    """
+    bsz, t, cin = x.shape
+    if qcore.is_quantized(w):
+        w2 = qcore.QuantizedTensor(
+            q=w.q[0], scale=w.scale,
+            axis=None if w.axis is None else 1, act_scale=w.act_scale)
+    else:
+        w2 = w[0]
+    y = ops.mat_mul(x.reshape(bsz * t, cin), w2, b, activation=activation,
+                    fabric=fabric)
+    return y.reshape(bsz, t, w.shape[-1])
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "fabric"))
 def _apply_jit(params, signal, *, cfg: BasecallerConfig,
                fabric: fabric_mod.FabricPolicy):
@@ -126,8 +145,11 @@ def _apply_jit(params, signal, *, cfg: BasecallerConfig,
     for i in range(n):
         p = params[f"conv{i + 1}"]
         act = "relu" if i < n - 1 else "none"
-        x = ops.conv1d(x, p["w"], p["b"], stride=cfg.strides[i],
-                       padding="same", activation=act, fabric=fabric)
+        if cfg.kernels[i] == 1 and cfg.strides[i] == 1:
+            x = _conv1x1_as_matmul(x, p["w"], p["b"], act, fabric)
+        else:
+            x = ops.conv1d(x, p["w"], p["b"], stride=cfg.strides[i],
+                           padding="same", activation=act, fabric=fabric)
     return x
 
 
@@ -179,11 +201,67 @@ def _apply_stream_jit(params, state, chunk, *, cfg: BasecallerConfig,
     for i in range(n):
         p = params[f"conv{i + 1}"]
         act = "relu" if i < n - 1 else "none"
-        x, carry = ops.conv1d_stream(x, p["w"], p["b"], state[i],
-                                     stride=cfg.strides[i], activation=act,
-                                     fabric=fabric)
-        new_state.append(carry)
+        if cfg.kernels[i] == 1 and cfg.strides[i] == 1:
+            # 1x1 conv carries no overlap (K - stride = 0 rows): same GEMM
+            # routing as the offline path, state passes through untouched
+            x = _conv1x1_as_matmul(x, p["w"], p["b"], act, fabric)
+            new_state.append(state[i])
+        else:
+            x, carry = ops.conv1d_stream(x, p["w"], p["b"], state[i],
+                                         stride=cfg.strides[i],
+                                         activation=act, fabric=fabric)
+            new_state.append(carry)
     return x, new_state
+
+
+def layer_inputs(params, signal: jax.Array,
+                 cfg: BasecallerConfig = BasecallerConfig(), *,
+                 fabric="reference"):
+    """Yield ``(scope, activation)`` pairs — each conv layer's *input* — for
+    calibration observers (``repro.quant.calibrate``).  Runs the float
+    forward pass; call with the pre-quantization params."""
+    x = signal[..., None] if signal.ndim == 2 else signal
+    x = x.astype(cfg.dtype)
+    n = len(cfg.kernels)
+    for i in range(n):
+        p = params[f"conv{i + 1}"]
+        act = "relu" if i < n - 1 else "none"
+        yield f"conv{i + 1}", x
+        x = ops.conv1d(x, p["w"], p["b"], stride=cfg.strides[i],
+                       padding="same", activation=act, fabric=fabric)
+
+
+def layer_inputs_stream(params, chunks,
+                        cfg: BasecallerConfig = BasecallerConfig()):
+    """Calibration feed over a stream of signal chunks: flattens
+    :func:`layer_inputs` across every chunk (constant memory — this is the
+    edge calibration loop)."""
+    for chunk in chunks:
+        yield from layer_inputs(params, jnp.asarray(chunk), cfg)
+
+
+def quantize(params, cfg: BasecallerConfig = BasecallerConfig(), *,
+             chunks=None, observer: str = "minmax", **observer_kwargs):
+    """Calibrate once, quantize once: int8 ``QuantizedParams`` for this CNN.
+
+    ``chunks``: iterable of ``(B, T)`` signal chunks to calibrate
+    activation scales from (omit for weight-only quantization with dynamic
+    activation scales).  The result drops into ``apply``/``apply_stream``
+    unchanged and runs on the fabric's int8 MAC path on every target.
+
+    Streaming caveat: only *calibrated* params keep the chunked==whole-read
+    equivalence ``apply_stream`` is built on.  With dynamic activation
+    scales each chunk derives its own absmax, so chunked logits diverge
+    from the whole-read logits — weight-only quantization is an offline
+    (``apply``) configuration; pass ``chunks=`` for anything streaming
+    (Read-Until, ``apply_stream``).
+    """
+    from repro import quant
+    calib = None
+    if chunks is not None:
+        calib = quant.calibrate(layer_inputs_stream(params, chunks, cfg),
+                                observer=observer, **observer_kwargs)
+    return quant.quantize_params(params, calib)
 
 
 def output_len(cfg: BasecallerConfig, t: int) -> int:

@@ -13,6 +13,11 @@ Both expose compress/decompress pairs shaped so the *compressed* tensor is
 what crosses the "pod" mesh axis (the trainer applies them around the pod
 all-reduce); tests check convergence parity within tolerance on a quadratic
 and on the basecaller.
+
+The int8 numerics are NOT defined here: this module is a thin consumer of
+the shared :mod:`repro.quant` helpers (one scale/clip/round in the repo —
+the same symmetric scheme the fabric's MAC path and the quantized
+basecaller use).
 """
 from __future__ import annotations
 
@@ -21,6 +26,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.quant import core as qcore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,13 +43,12 @@ def init_residual(params):
 
 def compress_int8(g: jax.Array):
     gf = g.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    scale = qcore.symmetric_scale(qcore.absmax(gf))
+    return qcore.quantize(gf, scale), scale
 
 
 def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+    return qcore.dequantize(q, scale)
 
 
 def compress_topk(g: jax.Array, frac: float):

@@ -98,31 +98,47 @@ class AdaptiveSamplingEngine:
         return self.runtime.tick()
 
     def drain(self, max_steps: int = 100_000) -> dict:
-        return self.runtime.run(max_steps)
+        out = self.runtime.run(max_steps)
+        out.update(self._energy())
+        return out
 
     def summary(self) -> dict:
-        return self.runtime.report()
+        out = self.runtime.report()
+        out.update(self._energy())
+        return out
+
+    def _energy(self) -> dict:
+        from repro.core.soc_model import energy_summary
+        return energy_summary(self.runtime.params, self.runtime.cfg,
+                              self.telemetry.samples)
 
 
 @register("adaptive_sampling", presets={
     "default": {"channels": 32, "chunk": 256},
     "smoke": {"channels": 4, "chunk": 128},
+    "edge_int8": {"channels": 32, "chunk": 256, "quantize": "int8"},
 })
 def build_adaptive_sampling(params=None, cfg=None, reference=None,
                             targets=None, *, channels: int, chunk: int,
-                            policy=None, align_cfg=None,
+                            quantize=None, policy=None, align_cfg=None,
                             use_kernel=fabric_mod.UNSET,
                             interpret=fabric_mod.UNSET, fabric=None,
                             seed: int = 0):
     """Builder: supply trained (params, cfg) + reference/targets, or get a
-    fresh CNN over a random reference with the first quarter as target."""
+    fresh CNN over a random reference with the first quarter as target.
+    ``quantize="int8"`` (the ``edge_int8`` preset) stores the CNN weights
+    int8 once; the Read-Until loop then basecalls on fixed-point MACs."""
     import jax
 
     from repro.core import basecaller as bc
+    from repro.engine.base import quantize_edge_params
     if cfg is None:
         cfg = bc.BasecallerConfig()
     if params is None:
         params = bc.init(jax.random.key(seed), cfg)
+    if quantize is not None:
+        params = quantize_edge_params(params, cfg, scheme=quantize,
+                                      chunk=max(chunk, 512), seed=seed)
     if reference is None:
         from repro.data import genome as G
         reference = G.random_genome(np.random.default_rng(seed), 20_000)

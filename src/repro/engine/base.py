@@ -61,5 +61,57 @@ class EngineBase:
         return self.summary()
 
     def summary(self) -> dict:
-        """Telemetry summary; engines may extend with derived metrics."""
-        return self.telemetry.summary()
+        """Telemetry summary, plus the SoC energy block for basecalling
+        engines (those carrying CNN ``params`` + a ``BasecallerConfig``)."""
+        out = self.telemetry.summary()
+        out.update(self._energy_summary())
+        return out
+
+    def _energy_summary(self) -> dict:
+        from repro.core.basecaller import BasecallerConfig
+        params = getattr(self, "params", None)
+        cfg = getattr(self, "cfg", None)
+        if params is None or not isinstance(cfg, BasecallerConfig):
+            return {}
+        from repro.core.soc_model import energy_summary
+        return energy_summary(params, cfg, self.telemetry.samples)
+
+
+def quantize_edge_params(params, bc_cfg, *, scheme: str = "int8",
+                         chunk: int = 2048, calib_chunks: int = 4,
+                         seed: int = 0):
+    """Build-time quantization behind the ``edge_int8`` presets.
+
+    Calibrates activation scales from a few synthetic normalized-signal
+    chunks (percentile observer) and quantizes the CNN weights **once**
+    into stored int8 + per-channel scales, so every subsequent dispatch
+    runs on the fabric's fixed-point MAC path with no per-call weight
+    re-quantization.  Callers with real signal should calibrate themselves
+    (``repro.core.basecaller.quantize(params, cfg, chunks=...)``) and pass
+    the quantized params in; params that already carry stored int8 pass
+    through untouched.
+    """
+    if scheme != "int8":
+        raise ValueError(f"unknown quantization scheme {scheme!r}")
+    from repro import quant
+    from repro.core import basecaller as bc
+    if quant.params_precision(params) == "int8":
+        import jax
+        leaves = jax.tree_util.tree_leaves(params,
+                                           is_leaf=quant.is_quantized)
+        if any(quant.is_quantized(x) and x.act_scale is None
+               for x in leaves):
+            import warnings
+            warnings.warn(
+                "edge_int8: supplied quantized params have no calibrated "
+                "activation scales — dynamic scales are chunk-local, so "
+                "streaming basecalls will not bit-match the whole-read "
+                "output; calibrate with basecaller.quantize(params, cfg, "
+                "chunks=...) for stream-equivalent int8", stacklevel=3)
+        return params
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    chunks = [rng.normal(size=(2, chunk)).astype(np.float32)
+              for _ in range(calib_chunks)]
+    return bc.quantize(params, bc_cfg, chunks=chunks,
+                       observer="percentile", pct=99.9)

@@ -102,14 +102,25 @@ class BasecallEngine(EngineBase):
 @register("basecall", presets={
     "default": {"batch": 16, "chunk": 2048},
     "smoke": {"batch": 4, "chunk": 512},
+    # the paper's edge configuration: weights stored int8 once at build,
+    # every dispatch on the fixed-point MAC path (calibrated activations)
+    "edge_int8": {"batch": 16, "chunk": 2048, "quantize": "int8"},
 })
 def build_basecall(params=None, cfg=None, *, batch: int, chunk: int,
+                   quantize: str | None = None,
                    use_kernel=fabric_mod.UNSET, fabric=None, seed: int = 0):
-    """Builder: supply trained (params, cfg) or get a fresh paper-shaped CNN."""
+    """Builder: supply trained (params, cfg) or get a fresh paper-shaped CNN.
+
+    ``quantize="int8"`` (the ``edge_int8`` preset) calibrates and quantizes
+    the weights once at build; already-quantized params pass through."""
     from repro.core import basecaller as bc
+    from repro.engine.base import quantize_edge_params
     if cfg is None:
         cfg = bc.BasecallerConfig()
     if params is None:
         params = bc.init(jax.random.key(seed), cfg)
+    if quantize is not None:
+        params = quantize_edge_params(params, cfg, scheme=quantize,
+                                      chunk=chunk, seed=seed)
     return BasecallEngine(params, cfg, batch=batch, chunk=chunk,
                           use_kernel=use_kernel, fabric=fabric)

@@ -118,17 +118,23 @@ class PathogenPipelineEngine(EngineBase):
 @register("pathogen_pipeline", presets={
     "default": {"depth": 2},
     "smoke": {"depth": 2},
+    "edge_int8": {"depth": 2, "quantize": "int8"},
 })
 def build_pathogen_pipeline(params=None, cfg=None, *, depth: int,
+                            quantize: str | None = None,
                             use_kernel=fabric_mod.UNSET, fabric=None,
                             panel=None, detect_cfg=None, seed: int = 0):
     """Builder: supply trained (params, cfg) — and a ``pathogen.Panel`` to
-    enable ``detect`` — or get a fresh paper-shaped CNN."""
+    enable ``detect`` — or get a fresh paper-shaped CNN.  ``quantize=
+    "int8"`` (the ``edge_int8`` preset) stores the CNN weights int8 once."""
     from repro.core import basecaller as bc
+    from repro.engine.base import quantize_edge_params
     if cfg is None:
         cfg = bc.BasecallerConfig()
     if params is None:
         params = bc.init(jax.random.key(seed), cfg)
+    if quantize is not None:
+        params = quantize_edge_params(params, cfg, scheme=quantize, seed=seed)
     return PathogenPipelineEngine(params, cfg, depth=depth,
                                   use_kernel=use_kernel, fabric=fabric,
                                   panel=panel, detect_cfg=detect_cfg)

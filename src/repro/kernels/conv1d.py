@@ -44,7 +44,7 @@ def stream_carry_len(ksize: int, stride: int) -> int:
 
 
 def _conv1d_kernel(x_ref, xn_ref, w_ref, bias_ref, o_ref, *, ksize: int,
-                   stride: int, activation: str, block_t: int):
+                   stride: int, activation: str, block_t: int, acc_dtype):
     # x_ref:  (1, block_t*stride, Cin)  rows starting at i*block_t*stride
     # xn_ref: (1, block_t*stride, Cin)  the next block (halo source)
     x = jnp.concatenate([x_ref[0], xn_ref[0]], axis=0)
@@ -53,7 +53,7 @@ def _conv1d_kernel(x_ref, xn_ref, w_ref, bias_ref, o_ref, *, ksize: int,
         # rows k, k+stride, ..., k+(block_t-1)*stride
         xk = jax.lax.slice(x, (k, 0), (k + (block_t - 1) * stride + 1, x.shape[1]),
                            (stride, 1))
-        part = jnp.dot(xk, w_ref[k], preferred_element_type=jnp.float32)
+        part = jnp.dot(xk, w_ref[k], preferred_element_type=acc_dtype)
         acc = part if acc is None else acc + part
     if bias_ref is not None:
         acc = acc + bias_ref[...].astype(acc.dtype)
@@ -88,8 +88,12 @@ def conv1d(
     block_t = min(block_t, t_out)
     block_n = min(block_n, cout)
     assert t_out % block_t == 0 and cout % block_n == 0, (t_out, block_t, cout, block_n)
+    # int8 operands take the fixed-point MAC path: int32 accumulation,
+    # exactly like matmul.py (the SoC's int8->int32 MACs)
+    int_inputs = jnp.issubdtype(x.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if int_inputs else jnp.float32
     if out_dtype is None:
-        out_dtype = x.dtype
+        out_dtype = jnp.int32 if int_inputs else x.dtype
     n_tb = t_out // block_t
     span = block_t * stride  # rows consumed per output block (sans halo)
     # main + neighbour blocks must tile the input: pad T up to (n_tb+1)*span
@@ -107,11 +111,13 @@ def conv1d(
         in_specs.append(pl.BlockSpec((1, block_n), lambda b, i, j: (0, j)))
         operands.append(bias.reshape(1, cout))
         kernel = functools.partial(_conv1d_kernel, ksize=ksize, stride=stride,
-                                   activation=activation, block_t=block_t)
+                                   activation=activation, block_t=block_t,
+                                   acc_dtype=acc_dtype)
     else:
         def kernel(x_ref, xn_ref, w_ref, o_ref):
             _conv1d_kernel(x_ref, xn_ref, w_ref, None, o_ref, ksize=ksize,
-                           stride=stride, activation=activation, block_t=block_t)
+                           stride=stride, activation=activation,
+                           block_t=block_t, acc_dtype=acc_dtype)
 
     return pl.pallas_call(
         kernel,

@@ -22,6 +22,16 @@ function is a thin wrapper over :func:`fabric.dispatch`:
 The target is resolved per call at trace time (never "once at import
 time"): jitted callers carry the policy in their static arguments so a
 policy change retraces.
+
+Quantization: matmul and conv1d additionally serve the SoC's int8->int32
+MAC path.  A weight passed as :class:`repro.quant.QuantizedTensor` (the
+quantize-once container: stored int8 + per-channel scales from
+``repro.quant.quantize_params``) runs int8 on **every** target with no
+per-call weight work; a ``precision="int8"`` tuning policy on float
+operands still works but re-derives and re-rounds the static weight each
+call — that wasted work is a visible counter
+(``fabric.precision.<op>.weight_requant``), and every int8 MAC dispatch
+counts under ``fabric.precision.<op>.int8``.
 """
 from __future__ import annotations
 
@@ -39,7 +49,52 @@ from repro.kernels import ref
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels.fabric import UNSET as _UNSET
 from repro.kernels.fabric import pow2_bucket as _pb
+from repro.quant import core as qcore
 from repro.utils.shapes import next_multiple, pad_to_multiple
+
+
+# ----------------------------------------------------------- int8 common --
+def _quantized_operands(op: str, a, w):
+    """int8 operands for one MAC-path dispatch: (aq, wq, dequant_scale).
+
+    ``w`` is either a :class:`repro.quant.QuantizedTensor` (stored int8 +
+    scales, the quantize-once path — per-call cost is one activation
+    absmax at most) or a float array (the legacy ``precision="int8"``
+    tuning policy — the static weight is re-rounded on every call, counted
+    under ``fabric.precision.<op>.weight_requant``).  Activations quantize
+    per-tensor: statically when a calibrated ``act_scale`` is stored,
+    dynamically from this call's absmax otherwise.
+    """
+    if qcore.is_quantized(w):
+        if w.axis is not None and w.axis % w.ndim != w.ndim - 1:
+            raise ValueError(
+                f"{op}: per-channel scales must run along the output (last) "
+                f"weight axis, got axis={w.axis} for shape {w.shape}")
+        wq, sw, sa = w.q, w.scale, w.act_scale
+    else:
+        sw = qcore.symmetric_scale(qcore.absmax(w))
+        wq = qcore.quantize(w, sw)
+        sa = None
+        fabric.record(f"fabric.precision.{op}.weight_requant")
+    if sa is None:
+        sa = qcore.symmetric_scale(qcore.absmax(a))
+    else:
+        fabric.record(f"fabric.precision.{op}.act_static")
+    aq = qcore.quantize(a, sa)
+    # combined dequant scale; per-channel sw broadcasts over the output's
+    # trailing channel axis for both matmul (N,) and conv1d (Cout,)
+    scale = jnp.asarray(sa, jnp.float32) * jnp.asarray(sw, jnp.float32)
+    return aq, wq, scale
+
+
+def _int8_epilogue(acc, scale, bias, activation, out_dtype):
+    """Shared dequant epilogue of both int8 ops: int32 accumulator ->
+    float32 * scale -> bias -> activation -> output dtype (exact, in
+    float)."""
+    out = acc.astype(jnp.float32) * scale
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return ref._ACTIVATIONS[activation](out).astype(out_dtype)
 
 
 # ---------------------------------------------------------------- matmul --
@@ -72,9 +127,12 @@ def _matmul_pallas(a, b, bias=None, *, activation="none", out_dtype=None,
     # precision policy: "auto" keeps the operand dtype (int operands already
     # take the int8->int32 MAC path inside the kernel); "int8" additionally
     # quantizes float operands onto the MAT fixed-point MACs — the paper's
-    # quantized-basecaller configuration, selectable per shape bucket.
+    # quantized-basecaller configuration, selectable per shape bucket.  A
+    # QuantizedTensor weight forces the int8 path regardless of the policy
+    # (its float original no longer exists).
     precision = tune.get("precision", "auto")
-    if precision == "int8" and not jnp.issubdtype(a.dtype, jnp.integer):
+    if qcore.is_quantized(b) or (precision == "int8" and
+                                 not jnp.issubdtype(a.dtype, jnp.integer)):
         return _matmul_int8_quantized(a, b, bias, activation=activation,
                                       out_dtype=out_dtype,
                                       interpret=interpret, tune=tune)
@@ -93,36 +151,57 @@ def _matmul_pallas(a, b, bias=None, *, activation="none", out_dtype=None,
     return out[:m, :n], waste
 
 
-def _matmul_int8_quantized(a, b, bias, *, activation, out_dtype, interpret,
-                           tune):
-    """Float GEMM on the int8 MAC path: per-tensor symmetric quantization,
-    int32 accumulation in the kernel, dequantize + bias + activation in
-    float (the epilogue stays exact; the inner int8 dispatch records the
-    precision counter)."""
-    sa = jnp.maximum(jnp.max(jnp.abs(a)), 1e-8).astype(jnp.float32) / 127.0
-    sb = jnp.maximum(jnp.max(jnp.abs(b)), 1e-8).astype(jnp.float32) / 127.0
-    aq = jnp.clip(jnp.round(a.astype(jnp.float32) / sa), -127, 127
-                  ).astype(jnp.int8)
-    bq = jnp.clip(jnp.round(b.astype(jnp.float32) / sb), -127, 127
-                  ).astype(jnp.int8)
-    acc, waste = _matmul_pallas(aq, bq, None, activation="none",
-                                out_dtype=jnp.int32, interpret=interpret,
-                                tune={**tune, "precision": "auto"})
-    out = acc.astype(jnp.float32) * (sa * sb)
-    if bias is not None:
-        out = out + bias.astype(out.dtype)
-    out = ref._ACTIVATIONS[activation](out)
-    return out.astype(out_dtype or a.dtype), waste
+def _matmul_int8_quantized(a, b, bias, *, activation, out_dtype,
+                           interpret=None, tune=None, reference=False):
+    """Float GEMM on the int8 MAC path: symmetric quantization, int32
+    accumulation, dequantize + bias + activation in float (exact epilogue).
+
+    ``b`` may be a stored :class:`repro.quant.QuantizedTensor` (per-channel
+    scales consumed directly — no per-call weight re-quantization) or a
+    float array (per-tensor scales derived here, counted as requant work).
+    ``reference=True`` runs the identical int8 math on the jnp oracle, so
+    quantized weights behave the same on every execution target.  Always
+    returns ``(out, pad_waste)``.
+    """
+    aq, bq, scale = _quantized_operands("matmul", a, b)
+    if reference:
+        fabric.record("fabric.precision.matmul.int8")
+        acc, waste = ref.matmul(aq, bq), 0
+    else:
+        acc, waste = _matmul_pallas(aq, bq, None, activation="none",
+                                    out_dtype=jnp.int32, interpret=interpret,
+                                    tune={**tune, "precision": "auto"})
+    return _int8_epilogue(acc, scale, bias, activation,
+                          out_dtype or a.dtype), waste
+
+
+def _matmul_reference(a, b, bias=None, *, activation="none", out_dtype=None,
+                      tune=None):
+    """jnp oracle, quantization-aware: QuantizedTensor weights — and the
+    ``precision="int8"`` policy — take the same int8 math the kernel path
+    computes (bit-identical: integer GEMMs have one answer), so
+    ``fabric="reference"`` — the default off-TPU — and kernel-unsupported
+    fallback shapes serve the fixed-point MAC semantics too."""
+    precision = (tune or {}).get("precision", "auto")
+    if qcore.is_quantized(b) or (precision == "int8" and
+                                 not jnp.issubdtype(a.dtype, jnp.integer)):
+        out, _ = _matmul_int8_quantized(a, b, bias, activation=activation,
+                                        out_dtype=out_dtype, reference=True)
+        return out
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        fabric.record("fabric.precision.matmul.int8")
+    return ref.matmul(a, b, bias, activation=activation, out_dtype=out_dtype)
 
 
 fabric.register_op(
     "matmul",
-    reference=ref.matmul,
+    reference=_matmul_reference,
     pallas=_matmul_pallas,
     tunables={"block_m": 256, "block_n": 256, "block_k": 512,
               "precision": "auto"},
     supported=_matmul_supported,
     bucket=_matmul_bucket,
+    reference_tune=True,
 )
 
 
@@ -131,9 +210,11 @@ def mat_mul(a, b, bias=None, *, activation: str = "none", block_m=None,
             use_kernel=_UNSET, interpret=_UNSET, fabric=None):
     """activation(a @ b + bias) for arbitrary (M, K) x (K, N).
 
-    ``precision`` ("auto" | "int8") overrides the tuning table's precision
-    policy for this call; "int8" runs float operands through the MAT
-    fixed-point MAC path (per-tensor symmetric quantization)."""
+    ``b`` may be a :class:`repro.quant.QuantizedTensor` (stored int8 +
+    per-column scales -> the fixed-point MAC path, no per-call weight
+    re-quantization).  ``precision`` ("auto" | "int8") overrides the
+    tuning table's precision policy for float operands on this call
+    (per-tensor symmetric quantization, weight re-rounded each call)."""
     pol = _fabric_mod.legacy_policy("ops.mat_mul", use_kernel, interpret,
                                     fabric)
     return _fabric_mod.dispatch(
@@ -162,6 +243,15 @@ def _conv1d_bucket(args, kwargs):
 def _conv1d_pallas(x, w, bias=None, *, stride=1, activation="none",
                    out_dtype=None, interpret, tune):
     """'valid' conv over already layout-padded input (see conv1d below)."""
+    precision = tune.get("precision", "auto")
+    if qcore.is_quantized(w) or (precision == "int8" and
+                                 not jnp.issubdtype(x.dtype, jnp.integer)):
+        return _conv1d_int8_quantized(x, w, bias, stride=stride,
+                                      activation=activation,
+                                      out_dtype=out_dtype,
+                                      interpret=interpret, tune=tune)
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        fabric.record("fabric.precision.conv1d.int8")
     ksize = w.shape[0]
     t_out = (x.shape[1] - ksize) // stride + 1
     bt = min(tune["block_t"], t_out)
@@ -181,20 +271,64 @@ def _conv1d_pallas(x, w, bias=None, *, stride=1, activation="none",
     return out[:, :t_out, :cout], waste
 
 
+def _conv1d_int8_quantized(x, w, bias, *, stride, activation, out_dtype,
+                           interpret=None, tune=None, reference=False):
+    """Conv1d on the int8 MAC path — the basecaller's dominant op on the
+    MAT fixed-point datapath.  Same contract as the matmul twin: stored
+    QuantizedTensor weights (per-Cout scales) are consumed directly;
+    float weights are re-quantized per call and counted as requant work;
+    ``reference=True`` computes identical int8 math on the jnp oracle.
+    Always returns ``(out, pad_waste)``."""
+    aq, wq, scale = _quantized_operands("conv1d", x, w)
+    if reference:
+        fabric.record("fabric.precision.conv1d.int8")
+        acc, waste = ref.conv1d(aq, wq, stride=stride), 0
+    else:
+        acc, waste = _conv1d_pallas(aq, wq, None, stride=stride,
+                                    activation="none", out_dtype=jnp.int32,
+                                    interpret=interpret,
+                                    tune={**tune, "precision": "auto"})
+    return _int8_epilogue(acc, scale, bias, activation,
+                          out_dtype or x.dtype), waste
+
+
+def _conv1d_reference(x, w, bias=None, *, stride=1, activation="none",
+                      out_dtype=None, tune=None):
+    """Quantization-aware jnp oracle (see ``_matmul_reference``)."""
+    precision = (tune or {}).get("precision", "auto")
+    if qcore.is_quantized(w) or (precision == "int8" and
+                                 not jnp.issubdtype(x.dtype, jnp.integer)):
+        out, _ = _conv1d_int8_quantized(x, w, bias, stride=stride,
+                                        activation=activation,
+                                        out_dtype=out_dtype, reference=True)
+        return out
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        fabric.record("fabric.precision.conv1d.int8")
+    return ref.conv1d(x, w, bias, stride=stride, activation=activation,
+                      out_dtype=out_dtype)
+
+
 fabric.register_op(
     "conv1d",
-    reference=ref.conv1d,
+    reference=_conv1d_reference,
     pallas=_conv1d_pallas,
-    tunables={"block_t": 256, "block_n": 128},
+    tunables={"block_t": 256, "block_n": 128, "precision": "auto"},
     supported=_conv1d_supported,
     bucket=_conv1d_bucket,
+    reference_tune=True,
 )
 
 
 def conv1d(x, w, bias=None, *, stride: int = 1, padding: str = "same",
            activation: str = "none", block_t=None, block_n=None,
-           out_dtype=None, use_kernel=_UNSET, interpret=_UNSET, fabric=None):
-    """Conv1d over (B, T, Cin) with (K, Cin, Cout) weights."""
+           precision=None, out_dtype=None, use_kernel=_UNSET,
+           interpret=_UNSET, fabric=None):
+    """Conv1d over (B, T, Cin) with (K, Cin, Cout) weights.
+
+    ``w`` may be a :class:`repro.quant.QuantizedTensor` (stored int8 +
+    per-Cout scales -> the fixed-point MAC path on every target);
+    ``precision`` ("auto" | "int8") overrides the tuning table's precision
+    policy for float weights on this call."""
     pol = _fabric_mod.legacy_policy("ops.conv1d", use_kernel, interpret,
                                     fabric)
     ksize = w.shape[0]
@@ -210,13 +344,14 @@ def conv1d(x, w, bias=None, *, stride: int = 1, padding: str = "same",
     return _fabric_mod.dispatch(
         "conv1d", x, w, bias, stride=stride, activation=activation,
         out_dtype=out_dtype, fabric=pol,
-        tune={"block_t": block_t, "block_n": block_n})
+        tune={"block_t": block_t, "block_n": block_n,
+              "precision": precision})
 
 
 def conv1d_stream(x, w, bias=None, carry=None, *, stride: int = 1,
                   activation: str = "none", block_t=None, block_n=None,
-                  out_dtype=None, use_kernel=_UNSET, interpret=_UNSET,
-                  fabric=None):
+                  precision=None, out_dtype=None, use_kernel=_UNSET,
+                  interpret=_UNSET, fabric=None):
     """Stateful chunked conv1d over (B, T, Cin); T % stride == 0.
 
     ``carry`` is the (B, K-stride, Cin) tail of the preceding chunks (zeros
@@ -243,7 +378,7 @@ def conv1d_stream(x, w, bias=None, carry=None, *, stride: int = 1,
     buf = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
     y = conv1d(buf, w, bias, stride=stride, padding="valid",
                activation=activation, block_t=block_t, block_n=block_n,
-               out_dtype=out_dtype, fabric=pol)
+               precision=precision, out_dtype=out_dtype, fabric=pol)
     new_carry = buf[:, buf.shape[1] - c:, :]
     return y, new_carry
 

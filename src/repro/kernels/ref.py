@@ -35,17 +35,22 @@ def matmul(a, b, bias=None, *, activation="none", out_dtype=None):
 
 # ---------------------------------------------------------------- conv1d ---
 def conv1d(x, w, bias=None, *, stride=1, activation="none", out_dtype=None):
-    """x: (B, T, Cin), w: (K, Cin, Cout) 'valid' conv; returns (B, T_out, Cout)."""
+    """x: (B, T, Cin), w: (K, Cin, Cout) 'valid' conv; returns (B, T_out, Cout).
+
+    Integer operands accumulate in int32 (the SoC's int8->int32 MAC path),
+    mirroring :func:`matmul`."""
+    int_inputs = jnp.issubdtype(x.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if int_inputs else jnp.float32
     if out_dtype is None:
-        out_dtype = x.dtype
+        out_dtype = jnp.int32 if int_inputs else x.dtype
     ksize = w.shape[0]
     t_out = (x.shape[1] - ksize) // stride + 1
-    acc = jnp.zeros((x.shape[0], t_out, w.shape[2]), jnp.float32)
+    acc = jnp.zeros((x.shape[0], t_out, w.shape[2]), acc_dtype)
     for k in range(ksize):
         xk = jax.lax.slice_in_dim(x, k, k + (t_out - 1) * stride + 1, axis=1)
         xk = xk[:, ::stride]
         acc = acc + jnp.einsum(
-            "btc,cd->btd", xk, w[k], preferred_element_type=jnp.float32
+            "btc,cd->btd", xk, w[k], preferred_element_type=acc_dtype
         )
     if bias is not None:
         acc = acc + bias.astype(acc.dtype)

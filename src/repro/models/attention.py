@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
-from repro.models.layers import fabric_wants_kernel, head_rmsnorm, rope
+from repro.models.layers import dense, fabric_wants_kernel, head_rmsnorm, rope
 from repro.models.param import ScopedBuilder
 
 
@@ -42,7 +42,9 @@ def init_attention(b: ScopedBuilder, cfg: ModelConfig):
 def _project_qkv(p, x, cfg: ModelConfig, positions, *, apply_rope=True,
                  q_only=False):
     b, s, _ = x.shape
-    q = shard(jnp.einsum("bsd,dq->bsq", x, p["wq"]), "batch", None, "act_heads")
+    # dense() routes QuantizedTensor projections onto the fabric's int8
+    # matmul path; float weights keep the einsum exactly as before
+    q = shard(dense(x, p["wq"]), "batch", None, "act_heads")
     q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
@@ -50,8 +52,8 @@ def _project_qkv(p, x, cfg: ModelConfig, positions, *, apply_rope=True,
         q = rope(q, positions, cfg.rope_theta)
     if q_only:
         return q, None, None
-    k = shard(jnp.einsum("bsd,dk->bsk", x, p["wk"]), "batch", None, "act_heads")
-    v = shard(jnp.einsum("bsd,dk->bsk", x, p["wv"]), "batch", None, "act_heads")
+    k = shard(dense(x, p["wk"]), "batch", None, "act_heads")
+    v = shard(dense(x, p["wv"]), "batch", None, "act_heads")
     k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
     v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
     if cfg.qk_norm:
@@ -201,7 +203,7 @@ def attention_block(p, x, cfg: ModelConfig, positions, *, causal=True,
         out = shard(out, "batch", "act_seq", None, None)
     out = out.reshape(bsz, s, cfg.q_dim)
     out = shard(out, "batch", None, "act_heads")
-    return jnp.einsum("bsq,qd->bsd", out, p["wo"])
+    return dense(out, p["wo"])
 
 
 # ------------------------------------------------------------- decode ----
@@ -323,5 +325,4 @@ def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos,
         probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
         out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
     out = out.reshape(bsz, 1, cfg.q_dim).astype(x.dtype)
-    return jnp.einsum("bsq,qd->bsd", out, p["wo"]).astype(x.dtype), \
-        new_k, new_v
+    return dense(out, p["wo"]).astype(x.dtype), new_k, new_v

@@ -17,6 +17,7 @@ from repro.distributed.sharding import shard
 from repro.kernels import fabric as fabric_mod
 from repro.models.config import ModelConfig
 from repro.models.param import ScopedBuilder
+from repro.quant import core as qcore
 
 
 def fabric_wants_kernel(op: str) -> bool:
@@ -43,6 +44,39 @@ _ACT = {
     "relu": jax.nn.relu,
     "squared_relu": lambda x: jnp.square(jax.nn.relu(x)),
 }
+
+
+def _quantized_fabric():
+    """Target override for quantized weights: under an active mesh the
+    Pallas kernels are unusable (single-device), so pin the quantization-
+    aware reference path — plain jnp int8 math, SPMD-shardable, same
+    numbers — and count the suppression like the float path does."""
+    if shardlib.active() is None:
+        return None
+    # only the fallback reason is recorded here — the subsequent
+    # ops.mat_mul dispatch counts the reference placement itself
+    fabric_mod.record("fabric.fallback.matmul.sharded")
+    return "reference"
+
+
+def dense(x: jax.Array, w, *, activation: str = "none") -> jax.Array:
+    """``x (..., D) @ w (D, F)`` — the one projection primitive.
+
+    Float weights keep the einsum (XLA owns layout and sharding).  A
+    :class:`repro.quant.QuantizedTensor` weight routes through the
+    fabric's int8 matmul dispatch — an einsum cannot consume stored int8 +
+    scales — so quantized params flow through the model layers with no
+    call-site changes; under an active mesh the dispatch is pinned to the
+    shardable reference int8 path (counted fallback).
+    """
+    if qcore.is_quantized(w):
+        from repro.kernels import ops
+        lead = x.shape[:-1]
+        out = ops.mat_mul(x.reshape(-1, x.shape[-1]), w,
+                          activation=activation, fabric=_quantized_fabric())
+        return out.reshape(*lead, w.shape[-1])
+    h = jnp.einsum("...d,df->...f", x, w)
+    return _ACT[activation](h) if activation != "none" else h
 
 
 # ------------------------------------------------------------------ norm ---
@@ -92,19 +126,27 @@ def init_mlp(b: ScopedBuilder, cfg: ModelConfig):
 
 
 def mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    if fabric_wants_kernel("matmul"):
+    # quantized weights force the ops path on any target (checked first so
+    # fabric_wants_kernel does not also record a placement for this op);
+    # under an active mesh they pin the shardable reference int8 path
+    quantized = any(qcore.is_quantized(p.get(k))
+                    for k in ("wi", "wi_gate", "wo"))
+    if quantized or fabric_wants_kernel("matmul"):
         # MAT path: (B*S, D) GEMMs with the activation fused into the
         # kernel epilogue; degenerate shapes fall back inside the dispatcher
         # (counted, not silent)
         from repro.kernels import ops
+        fab = _quantized_fabric() if quantized else None
         b, s, d = x.shape
         x2 = x.reshape(b * s, d)
         if cfg.mlp_gated:
-            h = (ops.mat_mul(x2, p["wi_gate"], activation=cfg.activation)
-                 * ops.mat_mul(x2, p["wi"]))
+            h = (ops.mat_mul(x2, p["wi_gate"], activation=cfg.activation,
+                             fabric=fab)
+                 * ops.mat_mul(x2, p["wi"], fabric=fab))
         else:
-            h = ops.mat_mul(x2, p["wi"], activation=cfg.activation)
-        return ops.mat_mul(h, p["wo"]).reshape(b, s, d)
+            h = ops.mat_mul(x2, p["wi"], activation=cfg.activation,
+                            fabric=fab)
+        return ops.mat_mul(h, p["wo"], fabric=fab).reshape(b, s, d)
     act = _ACT[cfg.activation]
     h = jnp.einsum("bsd,df->bsf", x, p["wi"])
     if cfg.mlp_gated:

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
-from repro.models.layers import fabric_wants_kernel
+from repro.models.layers import dense, fabric_wants_kernel
 from repro.models.param import ScopedBuilder
 
 
@@ -103,7 +103,8 @@ def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
     bsz, s, _ = x.shape
     di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
     dh = cfg.ssm_head_dim
-    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    # dense() routes QuantizedTensor projections onto the int8 matmul path
+    proj = dense(x, p["in_proj"])
     proj = shard(proj, "batch", None, "act_mlp")
     z, xbc, dt = _split_proj(cfg, proj)
     xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
@@ -153,7 +154,7 @@ def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
     y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]).astype(
         x.dtype)
     y = y * jax.nn.silu(z)
-    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    out = dense(y, p["out_proj"])
     new_conv_state = xbc_tail = None  # train path drops states
     return out, (new_conv_state, s_final)
 
@@ -176,7 +177,7 @@ def mamba_decode(p, x, cfg: ModelConfig, conv_state, ssm_state):
     bsz = x.shape[0]
     di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
     dh = cfg.ssm_head_dim
-    proj = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    proj = dense(x, p["in_proj"])
     z, xbc_new, dt = _split_proj(cfg, proj)
     window = jnp.concatenate([conv_state.astype(x.dtype), xbc_new], axis=1)
     conv = sum(window[:, i] * p["conv_w"][i]
@@ -208,5 +209,5 @@ def mamba_decode(p, x, cfg: ModelConfig, conv_state, ssm_state):
     y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]).astype(
         x.dtype)
     y = y * jax.nn.silu(z)
-    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    out = dense(y, p["out_proj"])
     return out, new_conv_state, new_ssm

@@ -1,0 +1,37 @@
+"""``repro.quant`` — end-to-end int8 for the SoC's fixed-point MAC path.
+
+Calibrate once, quantize weights once, serve every call on stored int8:
+
+    from repro import quant
+    from repro.core import basecaller as bc
+
+    calib   = quant.calibrate(bc.layer_inputs_stream(params, chunks, cfg),
+                              observer="percentile", pct=99.9)
+    qparams = quant.quantize_params(params, calib)
+    logits  = bc.apply(qparams, signal, cfg)      # int8 MACs, no requant
+
+or, one level up, ``repro.engine.build("basecall", preset="edge_int8")``.
+
+Module map: :mod:`core` (the one scale/clip/round + QuantizedTensor),
+:mod:`observers` (min-max / percentile calibration from streaming chunks),
+:mod:`quantize` (quantize_params / Calibration), :mod:`fake_quant` (QAT).
+"""
+from repro.quant.core import (EPS, QMAX, QuantizedTensor, absmax, dequantize,
+                              is_quantized, quantize, quantize_tensor,
+                              symmetric_scale)
+from repro.quant.fake_quant import (fake_quant, fake_quant_activation,
+                                    fake_quant_params)
+from repro.quant.observers import (MinMaxObserver, PercentileObserver,
+                                   make_observer)
+from repro.quant.params import (DEFAULT_WEIGHT_KEYS, Calibration, calibrate,
+                                dequantize_params, params_precision,
+                                quantize_params, quantized_fraction)
+
+__all__ = [
+    "EPS", "QMAX", "QuantizedTensor", "absmax", "dequantize", "is_quantized",
+    "quantize", "quantize_tensor", "symmetric_scale",
+    "fake_quant", "fake_quant_activation", "fake_quant_params",
+    "MinMaxObserver", "PercentileObserver", "make_observer",
+    "DEFAULT_WEIGHT_KEYS", "Calibration", "calibrate", "dequantize_params",
+    "params_precision", "quantize_params", "quantized_fraction",
+]

@@ -1,0 +1,131 @@
+"""Shared int8 numerics: the one scale/clip/round in the repo.
+
+The paper's SoC does its heavy lifting on int8->int32 fixed-point MACs
+(Sec III, 4x4 systolic MAT); everything in this repo that quantizes —
+the compute fabric's int8 matmul/conv paths, gradient compression for the
+pod link, calibration, fake-quant for QAT — shares the symmetric scheme
+defined here, so there is exactly one definition of "int8" to test:
+
+    q = clip(round(x / s), -127, 127),   s = max(absmax, eps) / 127
+
+Symmetric (zero-point-free) quantization matches what a weight-stationary
+systolic array wants: the accumulator needs no zero-point correction term
+and dequantization is one multiply in the epilogue.  Scales are per-tensor
+(scalar) or per-channel (one scalar per output channel, ``axis``).
+
+:class:`QuantizedTensor` is the quantize-once container: int8 values plus
+their scales, stored as a pytree so it rides through ``jax.jit`` in place
+of the float weight it replaced (shape/ndim/dtype delegate to the int8
+payload, so shape-bucketing and kernel support predicates see the same
+geometry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127          # int8 symmetric range: [-127, 127] (no -128, keeps |q| symmetric)
+EPS = 1e-8          # absmax floor so all-zero tensors get a valid scale
+
+
+def absmax(x: jax.Array, axis: Optional[int] = None) -> jax.Array:
+    """Max |x| — per tensor (scalar) or per channel of ``axis`` (1-D)."""
+    xf = jnp.abs(x.astype(jnp.float32))
+    if axis is None:
+        return jnp.max(xf)
+    reduce_axes = tuple(i for i in range(x.ndim) if i != (axis % x.ndim))
+    return jnp.max(xf, axis=reduce_axes)
+
+
+def symmetric_scale(amax, *, qmax: int = QMAX, eps: float = EPS) -> jax.Array:
+    """The canonical scale: ``max(absmax, eps) / qmax`` in float32."""
+    return jnp.maximum(jnp.asarray(amax, jnp.float32), eps) / qmax
+
+
+def _broadcast_scale(scale, ndim: int, axis: Optional[int]):
+    s = jnp.asarray(scale, jnp.float32)
+    if axis is None or s.ndim == 0:
+        return s
+    shape = [1] * ndim
+    shape[axis % ndim] = s.shape[0]
+    return s.reshape(shape)
+
+
+def quantize(x: jax.Array, scale, *, axis: Optional[int] = None,
+             qmax: int = QMAX) -> jax.Array:
+    """clip(round(x / scale)) -> int8.  ``scale`` scalar or per-``axis``."""
+    s = _broadcast_scale(scale, x.ndim, axis)
+    q = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale, *, axis: Optional[int] = None) -> jax.Array:
+    """int8 -> float32: ``q * scale``."""
+    return q.astype(jnp.float32) * _broadcast_scale(scale, q.ndim, axis)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Quantize-once weight storage: int8 values + their scales.
+
+    ``q``         int8 payload (same shape as the float weight it replaces)
+    ``scale``     float32 scalar (per-tensor) or (C,) vector (per-channel)
+    ``axis``      channel axis ``scale`` runs along; ``None`` = per-tensor
+    ``act_scale`` optional calibrated scale for the op's *input* activation
+                  (static activation quantization); ``None`` = quantize the
+                  activation dynamically per call
+
+    Registered as a pytree so it can replace a weight leaf inside jitted
+    params; ``axis`` is static metadata (part of the trace signature).
+    """
+    q: jax.Array
+    scale: jax.Array
+    axis: Optional[int] = None
+    act_scale: Optional[jax.Array] = None
+
+    # geometry delegates to the payload so shape-bucket/support predicates
+    # in the fabric see the weight they expect
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    @property
+    def size(self):
+        return self.q.size
+
+    def dequantize(self) -> jax.Array:
+        return dequantize(self.q, self.scale, axis=self.axis)
+
+    def tree_flatten(self):
+        return (self.q, self.scale, self.act_scale), (self.axis,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale, act_scale = children
+        return cls(q=q, scale=scale, axis=aux[0], act_scale=act_scale)
+
+
+def quantize_tensor(w: jax.Array, *, axis: Optional[int] = None,
+                    act_scale=None) -> QuantizedTensor:
+    """Quantize a float weight once: absmax -> scale -> int8."""
+    scale = symmetric_scale(absmax(w, axis))
+    if act_scale is not None:
+        act_scale = jnp.asarray(act_scale, jnp.float32)
+    return QuantizedTensor(q=quantize(w, scale, axis=axis), scale=scale,
+                           axis=axis, act_scale=act_scale)
+
+
+def is_quantized(x) -> bool:
+    return isinstance(x, QuantizedTensor)

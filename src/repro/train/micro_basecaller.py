@@ -31,9 +31,15 @@ def train_micro_basecaller(steps: int = 400, *,
                            pm: nanopore.PoreModel = DEMO_PORE,
                            cfg: bc.BasecallerConfig = DEMO_CFG,
                            seq_len: int = 40, batch: int = 8,
-                           lr: float = 3e-3, seed: int = 0,
+                           lr: float = 3e-3, seed: int = 0, qat: bool = False,
                            log: Optional[Callable[[int, float], None]] = None):
-    """Returns (cfg, params) of a basecaller trained on simulated reads."""
+    """Returns (cfg, params) of a basecaller trained on simulated reads.
+
+    ``qat=True`` trains against the int8 deployment numerics: the loss
+    sees fake-quantized weights (the exact ``repro.quant`` round-trip the
+    serving path applies, straight-through gradients), so the float params
+    it returns lose almost nothing when ``quant.quantize_params`` stores
+    them as int8 for the ``edge_int8`` presets."""
     params = bc.init(jax.random.key(seed), cfg)
     ocfg = opt.OptimizerConfig(lr=lr, warmup_steps=20, total_steps=steps,
                                schedule="cosine", weight_decay=0.0)
@@ -43,6 +49,9 @@ def train_micro_basecaller(steps: int = 400, *,
     @jax.jit
     def step(params, state, signal, spad, labels, lpad):
         def loss_fn(p):
+            if qat:
+                from repro.quant import fake_quant_params
+                p = fake_quant_params(p)
             logits = bc.apply(p, signal, cfg)
             lp = spad[:, :: cfg.total_stride][:, : logits.shape[1]]
             return ctc.ctc_loss(logits, lp, labels, lpad).mean()

@@ -14,6 +14,23 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+@pytest.fixture(autouse=True)
+def _fresh_warning_registries():
+    """Make shim-warning tests robust to prior emissions, in any order.
+
+    ``warnings.warn`` dedupes once-per-location through the emitting
+    module's ``__warningregistry__``; when an earlier test already
+    triggered a shim's DeprecationWarning at the same line, a later
+    ``pytest.warns`` can find the registry primed and catch nothing — an
+    order-dependent failure that only shows in the full tier-1 run.
+    Clearing the registries before each test makes every emission
+    observable regardless of what ran first."""
+    for mod in list(sys.modules.values()):
+        reg = getattr(mod, "__warningregistry__", None)
+        if reg:
+            reg.clear()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(1234)
