@@ -1,0 +1,74 @@
+"""Flowcell-scale Read-Until throughput: bases/s vs channel count and mesh.
+
+Drives the full serving stack — FlowcellSimulator (staggered arrivals, pore
+recovery) -> sharded lane pytree -> PrefixMapper -> policy — on the
+deterministic step encoder + its exact hand-built decoder CNN, so the sweep
+measures the runtime, not basecaller training noise.  Reported per config:
+
+  * aggregate bases/s and samples/s (the scaling claim: more channels per
+    dispatch amortize per-tick host + launch overhead),
+  * mean channel occupancy and pore-time saved (the selective-sequencing
+    economy),
+  * decision p50/p99.
+
+The mesh sweep re-runs the largest channel count on a 1-device vs N-device
+lane mesh when multiple (virtual) devices exist — the CI flowcell-smoke job
+runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=2``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _build(channels: int, n_reads: int, read_len, *, mesh=None,
+           chunk: int = 128):
+    import repro.engine as engine_api
+    from repro.data import genome as G
+    from repro.realtime import PolicyConfig
+
+    reference = G.random_genome(np.random.default_rng(7), 24_000)
+    return engine_api.build(
+        "adaptive_sampling", channels=channels, chunk=chunk,
+        reference=reference, targets=[(0, 12_000)],
+        flowcell={"encoder": "step", "n_reads": n_reads,
+                  "read_len": tuple(read_len), "recovery_samples": 64,
+                  "stagger_samples": 16, "seed": 3},
+        policy=PolicyConfig(min_prefix_bases=24, map_prefix_bases=32,
+                            max_prefix_bases=96, eject_latency_samples=64),
+        fabric="reference", mesh=mesh, pipeline_depth=2)
+
+
+def _run_one(row, name: str, channels: int, n_reads: int, read_len,
+             mesh=None):
+    eng = _build(channels, n_reads, read_len, mesh=mesh)
+    eng.runtime.warmup()              # compile outside the timed region
+    rep = eng.drain(max_steps=50_000)
+    wall_us = rep["wall_s"] * 1e6
+    row(name, wall_us,
+        f"bases_per_s={rep['bases_per_s']:.0f}"
+        f";samples_per_s={rep['samples_per_s']:.0f}"
+        f";reads={rep['reads']}"
+        f";occupancy={rep.get('occupancy_mean', 0.0):.2f}"
+        f";pore_saved_frac={rep['signal_saved_frac']:.2f}"
+        f";p50_ms={rep['decision_p50_ms']:.1f}"
+        f";p99_ms={rep['decision_p99_ms']:.1f}")
+    return rep
+
+
+def bench_flowcell(row, *, smoke: bool = False) -> None:
+    import jax
+
+    channel_counts = [64, 256, 512] if smoke else [1, 64, 256, 512]
+    reads_per_channel = 2 if smoke else 4
+    read_len = (96, 160) if smoke else (150, 300)
+    for ch in channel_counts:
+        _run_one(row, f"flowcell:ch{ch}", ch,
+                 n_reads=reads_per_channel * max(ch, 8), read_len=read_len)
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        ch = channel_counts[-1]
+        from repro.engine.adaptive import resolve_lane_mesh
+        for n in (1, n_dev):
+            _run_one(row, f"flowcell:ch{ch}:mesh{n}", ch,
+                     n_reads=reads_per_channel * ch, read_len=read_len,
+                     mesh=resolve_lane_mesh(n))

@@ -21,6 +21,10 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
                          SoC energy per precision (fp32 / bf16 / int8) on a
                          fixed-seed micro basecaller — the CI quant-parity
                          artifact and analysis/report.py --section quant
+  bench_flowcell         flowcell-scale Read-Until: aggregate bases/s vs
+                         channel count (and vs lane-mesh size when multiple
+                         devices exist) on the deterministic step encoder —
+                         the CI flowcell-smoke artifact (BENCH_flowcell.json)
 """
 from __future__ import annotations
 
@@ -212,6 +216,11 @@ def bench_adaptive():
     ad.bench_adaptive()
 
 
+def bench_flowcell(smoke: bool = False):
+    import flowcell as fcb
+    fcb.bench_flowcell(row, smoke=smoke)
+
+
 def bench_kernel_dispatch():
     """Compute fabric: each registered op on each target, with the
     dispatch/fallback counters the engine telemetry surfaces."""
@@ -357,6 +366,7 @@ def main() -> None:
         "kernel_dispatch": bench_kernel_dispatch,
         "adaptive": bench_adaptive,
         "quant": bench_quant,
+        "flowcell": lambda: bench_flowcell(smoke=args.smoke),
     }
     if args.only:
         selected = [n.strip() for n in args.only.split(",")]
@@ -365,9 +375,11 @@ def main() -> None:
             ap.error(f"unknown benches {unknown}; available: "
                      f"{sorted(benches)}")
     else:
-        # adaptive and quant both train a micro basecaller — skipped in smoke
+        # adaptive and quant train a micro basecaller, flowcell sweeps up to
+        # 512 channels — all skipped in smoke (run via --only)
         selected = [n for n in benches
-                    if n not in ("adaptive", "quant") or not args.smoke]
+                    if n not in ("adaptive", "quant", "flowcell")
+                    or not args.smoke]
 
     print("name,us_per_call,derived")
     for name in selected:

@@ -1,0 +1,79 @@
+"""Flowcell-scale serving: a 128-channel selective-sequencing run.
+
+The full pore lifecycle on every channel — capture (staggered, arrival-
+ordered) -> stateful streaming basecall -> prefix map -> accept/eject ->
+recovery -> next molecule — served by one sharded lane-state pytree and one
+jitted per-tick step, with host admission double-buffered against device
+compute (``pipeline_depth=2``).
+
+Uses the deterministic step encoder and its exact hand-built decoder CNN
+(:func:`repro.data.flowcell.step_basecaller`), so the demo runs in seconds
+with no training; swap in a trained basecaller + ``encoder="pore"`` for the
+physical squiggle model (see examples/adaptive_sampling.py).
+
+Run:  PYTHONPATH=src python examples/flowcell_serving.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import repro.engine as engine_api
+from repro.data import genome as G
+from repro.realtime import PolicyConfig
+
+
+def main():
+    channels, n_reads = 128, 512
+    reference = G.random_genome(np.random.default_rng(7), 40_000)
+    targets = [(2_000, 12_000)]      # enrich for 25% of the genome
+
+    print(f"== building a {channels}-channel flowcell engine ==")
+    engine = engine_api.build(
+        "adaptive_sampling", channels=channels, chunk=128,
+        reference=reference, targets=targets,
+        flowcell={"encoder": "step", "n_reads": n_reads,
+                  "read_len": (150, 300), "recovery_samples": 64,
+                  "stagger_samples": 16, "seed": 3},
+        policy=PolicyConfig(min_prefix_bases=24, map_prefix_bases=48,
+                            max_prefix_bases=96, eject_latency_samples=64),
+        pipeline_depth=2, mesh="auto")
+    print(f"  {n_reads} molecules queued on the flowcell, target fraction "
+          f"{engine.panel.target_frac:.2f}")
+
+    print("\n== serving (capture -> basecall -> map -> decide -> recover) ==")
+    t0 = time.time()
+    report = engine.drain()
+    wall = time.time() - t0
+
+    print(f"  done in {wall:.1f}s "
+          f"({report['flowcell_ticks']:.0f} flowcell ticks)")
+    print(f"  decisions: {report['accepted']} accepted, "
+          f"{report['ejected']} ejected, {report['timeouts']} timeouts, "
+          f"{report['exhausted']} sequenced-through")
+    print(f"  aggregate throughput: {report['bases_per_s']:.0f} bases/s, "
+          f"{report['samples_per_s']:.0f} samples/s")
+    print(f"  channel occupancy: mean {report['occupancy_mean']:.2f} "
+          f"(min {report['occupancy_min']:.2f}, "
+          f"max {report['occupancy_max']:.2f}); "
+          f"{report['reads_per_channel_mean']:.1f} reads/channel")
+    print(f"  pore time saved: {report['pore_time_saved_samples']} samples "
+          f"({100 * report['signal_saved_frac']:.1f}% of signal)")
+    print(f"  decision latency p50 {report['decision_p50_ms']:.0f} ms, "
+          f"p99 {report['decision_p99_ms']:.0f} ms")
+    print(f"  enrichment: {report['enrichment']:.2f}x "
+          f"(on-target fraction {report['on_target_frac_selective']:.2f} "
+          f"vs {report['on_target_frac_nonselective']:.2f} non-selective)")
+
+    assert report["reads"] == n_reads, "not every molecule resolved"
+    assert report["signal_saved_frac"] > 0.0, "no signal saved"
+    assert report["enrichment"] > 1.0, "no enrichment achieved"
+    print("\nOK — flowcell served every molecule, saved signal, and "
+          "enriched the target.")
+
+
+if __name__ == "__main__":
+    main()

@@ -188,9 +188,14 @@ def apply_stream(params, state, chunk: jax.Array,
     return _apply_stream_jit(params, state, chunk, cfg=cfg, fabric=pol)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "fabric"))
-def _apply_stream_jit(params, state, chunk, *, cfg: BasecallerConfig,
+def apply_stream_core(params, state, chunk, *, cfg: BasecallerConfig,
                       fabric: fabric_mod.FabricPolicy):
+    """Unjitted body of :func:`apply_stream` — the traceable streaming step.
+
+    Composable into larger jitted programs (the flowcell runtime fuses it
+    with the CTC collapse and wraps the result in ``shard_map`` over a lane
+    mesh); ``apply_stream`` itself jits this with static (cfg, fabric).
+    """
     x = chunk[..., None] if chunk.ndim == 2 else chunk
     if x.shape[1] % cfg.total_stride:
         raise ValueError(f"chunk length {x.shape[1]} must be a multiple of "
@@ -212,6 +217,10 @@ def _apply_stream_jit(params, state, chunk, *, cfg: BasecallerConfig,
                                          activation=act, fabric=fabric)
             new_state.append(carry)
     return x, new_state
+
+
+_apply_stream_jit = jax.jit(apply_stream_core,
+                            static_argnames=("cfg", "fabric"))
 
 
 def layer_inputs(params, signal: jax.Array,

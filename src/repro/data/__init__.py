@@ -1,1 +1,3 @@
-"""Data pipelines: synthetic genomes, nanopore squiggle simulation, LM tokens."""
+"""Data pipelines: synthetic genomes, nanopore squiggle simulation, LM
+tokens, and the flowcell simulator (N channels of staggered, arrival-ordered
+reads with a pore lifecycle) behind the flowcell-scale Read-Until runtime."""

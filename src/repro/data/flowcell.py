@@ -1,0 +1,182 @@
+"""Flowcell simulator: N channels of staggered, arrival-ordered reads.
+
+A nanopore flowcell is not a batch of reads — it is a pool of pores, each
+cycling through a lifecycle:
+
+    sequencing -> (decision: accept / eject / ran dry) -> recovering -> next
+    molecule captured
+
+Ejecting an off-target molecule frees its pore early, so the *next* molecule
+starts sooner — the throughput win adaptive sampling exists for.  This
+module models exactly that economy for the Read-Until runtime:
+
+  * molecules arrive in a global order (``read_id`` = arrival rank); the
+    i-th capture is the same molecule no matter how many lanes serve the
+    flowcell or how they are meshed — the invariance the golden tests pin;
+  * each channel has a ``ready_at`` clock (flowcell time, in raw samples):
+    staggered at start, then pushed forward after every read by the samples
+    the pore still spends on the molecule after the decision (the full
+    remainder for ACCEPT / ran-dry, only the eject latency for EJECT) plus a
+    fixed recovery time — so eject decisions genuinely buy channel-time;
+  * signal synthesis is lazy and keyed on ``read_id`` alone, keeping a
+    512-channel run at O(active reads) memory.
+
+Two signal encoders:
+
+  ``"pore"``   the physical squiggle model (:mod:`repro.data.nanopore`):
+               k-mer current levels, stochastic dwell, noise, drift.  Needs
+               a trained basecaller to decode.
+  ``"step"``   a noiseless level-per-base code paired with
+               :func:`step_basecaller`, a hand-constructed CNN that decodes
+               it exactly.  Deterministic end-to-end — the fixed-seed
+               oracle for lane-invariance tests and fast CI benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data import nanopore
+
+# ------------------------------------------------------- step encoding ----
+# Base b in 1..4 -> STEP_DWELL samples at level STEP_LEVELS[b], then
+# STEP_DWELL samples at the blank level 0.  The gap frames decode to CTC
+# blank, so repeated bases survive the CTC collapse.
+STEP_DWELL = 2
+STEP_LEVELS = np.array([0.0, 2.0, 4.0, 6.0, 8.0], np.float32)
+STEP_SAMPLES_PER_BASE = 2 * STEP_DWELL
+
+
+def step_encode(seq: np.ndarray) -> np.ndarray:
+    """(L,) bases 1..4 -> (L * STEP_SAMPLES_PER_BASE,) noiseless signal."""
+    seq = np.asarray(seq)
+    seg = np.zeros((len(seq), STEP_SAMPLES_PER_BASE), np.float32)
+    seg[:, :STEP_DWELL] = STEP_LEVELS[seq][:, None]
+    return seg.reshape(-1)
+
+
+def step_basecaller():
+    """A hand-built CNN that decodes :func:`step_encode` exactly.
+
+    conv1 (K=2, stride=2) scores each 2-sample segment against every class
+    center with the nearest-center rule written as a linear map:
+    ``score_c = 2*mu_c*mean(x) - mu_c**2`` (the ``x**2`` term is class-
+    independent).  Level segments win their base's class by a margin of at
+    least ``(mu_b - mu_c)**2 = 4``; gap segments ReLU to an all-zero tie
+    which argmax resolves to BLANK.  conv2 is a 1x1 identity so the
+    streaming path also exercises the conv-as-GEMM head.  Returns
+    ``(BasecallerConfig, params)`` ready for ``apply_stream``.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import basecaller as bc
+
+    cfg = bc.BasecallerConfig(kernels=(2, 1), channels=(5, 5),
+                              strides=(2, 1))
+    mu = jnp.asarray(STEP_LEVELS)
+    w1 = jnp.broadcast_to(mu, (2, 1, 5)).astype(jnp.float32)
+    b1 = -(mu ** 2).astype(jnp.float32)
+    params = {
+        "conv1": {"w": w1, "b": b1},
+        "conv2": {"w": jnp.eye(5, dtype=jnp.float32)[None], "b": jnp.zeros(5)},
+    }
+    return cfg, params
+
+
+# ------------------------------------------------------------ simulator ---
+@dataclasses.dataclass(frozen=True)
+class FlowcellConfig:
+    """Shape and physics of one simulated flowcell run."""
+    channels: int = 512
+    n_reads: int = 1024             # molecules available to the whole run
+    read_len: tuple[int, int] = (150, 400)   # bases, inclusive uniform range
+    recovery_samples: int = 128     # pore recovery time after any completion
+    stagger_samples: int = 32       # per-channel initial capture stagger
+    encoder: str = "pore"           # "pore" | "step"
+    seed: int = 0
+    pm: nanopore.PoreModel = nanopore.PoreModel()
+
+
+class FlowcellSimulator:
+    """Per-channel pore lifecycle over a fixed pool of molecules.
+
+    The runtime polls ``next_read(channel, now)`` for every free lane each
+    tick (``now`` in flowcell samples) and calls ``read_done`` when a lane's
+    read resolves; everything else is internal.  Molecule content depends
+    only on ``read_id``, never on which channel captured it or when.
+    """
+
+    def __init__(self, reference: np.ndarray,
+                 config: FlowcellConfig = FlowcellConfig(), *,
+                 target_mask: np.ndarray | None = None):
+        self.reference = np.asarray(reference, np.int32)
+        self.config = config
+        self.target_mask = target_mask
+        lo, hi = config.read_len
+        if not (0 < lo <= hi):
+            raise ValueError(f"bad read_len range {config.read_len}")
+        if hi >= len(self.reference):
+            raise ValueError("read_len exceeds the reference")
+        if config.encoder not in ("pore", "step"):
+            raise ValueError(f"unknown encoder {config.encoder!r}")
+        rng = np.random.default_rng(config.seed)
+        # arrival-ordered molecule metadata, drawn once: read i is the same
+        # molecule for every lane count / mesh shape
+        self._starts = rng.integers(0, len(self.reference) - hi,
+                                    size=config.n_reads)
+        self._lens = rng.integers(lo, hi + 1, size=config.n_reads)
+        self._ready_at = np.arange(config.channels, dtype=np.int64) \
+            * config.stagger_samples
+        self._next = 0
+
+    # ------------------------------------------------------------ state --
+    @property
+    def emitted(self) -> int:
+        return self._next
+
+    @property
+    def exhausted(self) -> bool:
+        """All molecules captured (channels may still be sequencing them)."""
+        return self._next >= self.config.n_reads
+
+    def ready_at(self, channel: int) -> int:
+        return int(self._ready_at[channel])
+
+    # ------------------------------------------------------- lifecycle --
+    def next_read(self, channel: int, now_samples: int):
+        """The next captured molecule for a recovered channel, or None when
+        the channel is still busy/recovering or the pool ran dry."""
+        if self.exhausted or now_samples < self._ready_at[channel]:
+            return None
+        read = self._synthesize(self._next)
+        self._next += 1
+        return read
+
+    def read_done(self, channel: int, now_samples: int,
+                  hold_samples: int) -> None:
+        """Account the pore-time tail of a resolved read: ``hold_samples``
+        is what the pore still spends on the molecule after the decision
+        (eject latency, or the full remainder for accept / ran-dry)."""
+        self._ready_at[channel] = (now_samples + max(int(hold_samples), 0)
+                                   + self.config.recovery_samples)
+
+    # ------------------------------------------------------- synthesis --
+    def _synthesize(self, read_id: int):
+        from repro.realtime.session import SimulatedRead
+
+        cfg = self.config
+        start = int(self._starts[read_id])
+        length = int(self._lens[read_id])
+        seq = self.reference[start: start + length]
+        if cfg.encoder == "step":
+            signal = step_encode(seq)
+        else:
+            rng = np.random.default_rng((cfg.seed, 7919, read_id))
+            sig, _ = nanopore.simulate_read(rng, seq, cfg.pm)
+            signal = nanopore.normalize(sig)
+        on_target = None
+        if self.target_mask is not None:
+            on_target = bool(self.target_mask[start + length // 2])
+        return SimulatedRead(signal=signal, read_id=read_id,
+                             on_target=on_target, position=start)

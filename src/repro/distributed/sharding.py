@@ -145,6 +145,40 @@ def shard(x: jax.Array, *axes) -> jax.Array:
         x, NamedSharding(ctx.mesh, spec))
 
 
+LANE_AXIS = "data"  # flowcell channel lanes are batch-parallel work
+
+
+def lane_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D device mesh for lane-parallel streaming (flowcell channels).
+
+    Lanes are plain batch parallelism, so the axis is the standard ``data``
+    axis — ``default_rules`` and ``logical_spec("batch")`` apply unchanged.
+    ``n_devices=None`` takes every local device; ``n_devices=1`` is the
+    single-device degenerate mesh (useful for mesh-invariance tests).
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 0 < n <= len(devs):
+        raise ValueError(f"n_devices={n} not in 1..{len(devs)}")
+    return Mesh(np.asarray(devs[:n]), (LANE_AXIS,))
+
+
+def shard_map_compat(fn, mesh: Mesh, *, in_specs, out_specs):
+    """``jax.shard_map`` across the jax versions this repo supports.
+
+    jax >= 0.5 exposes it as ``jax.shard_map``; earlier versions only have
+    ``jax.experimental.shard_map.shard_map`` (whose replication checker
+    rejects the debug callbacks the compute fabric uses for counters, so
+    ``check_rep=False``).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
 def param_shardings(axes_tree, shape_tree):
     """NamedSharding tree for a params pytree (shape_tree from eval_shape)."""
     ctx = _CTX

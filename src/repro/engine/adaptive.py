@@ -29,16 +29,48 @@ def legacy_adaptive_policy(use_kernel: bool = False,
         else ("pallas_interpret" if interpret else "pallas_tpu"))
 
 
+def resolve_lane_mesh(mesh, channels: int | None = None):
+    """Engine-facing mesh spelling: None (single device), ``"auto"`` (the
+    largest local device count that divides ``channels`` — never a build
+    error), an explicit int device count (strict: the runtime rejects a
+    non-dividing mesh), or a prebuilt ``jax.sharding.Mesh``."""
+    if mesh is None:
+        return None
+    import jax
+
+    from repro.distributed.sharding import lane_mesh
+    if mesh == "auto":
+        n = jax.device_count()
+        if channels is not None:
+            while n > 1 and channels % n:
+                n -= 1
+        return lane_mesh(n) if n > 1 else None
+    if isinstance(mesh, int):
+        return lane_mesh(mesh) if mesh > 1 else None
+    return mesh
+
+
 class AdaptiveSamplingEngine:
     """Read-Until serving shape: keep/eject decisions with latency +
-    signal-saved accounting."""
+    signal-saved accounting.
+
+    ``flowcell=`` attaches a :class:`repro.data.flowcell.FlowcellSimulator`
+    as the read source (``True`` for defaults, a dict of
+    :class:`FlowcellConfig` fields, or a ``FlowcellConfig``): free channels
+    then capture staggered, arrival-ordered molecules with pore recovery,
+    so eject decisions buy measurable channel throughput.  ``mesh=`` shards
+    the per-lane device state over a lane mesh (``"auto"``, a device count,
+    or a Mesh); ``pipeline_depth=2`` double-buffers host admission/mapping
+    against device compute.
+    """
 
     workload = "adaptive_sampling"
 
     def __init__(self, params, bc_cfg, reference, target_intervals, *,
                  channels: int = 32, chunk: int = 256, policy=None,
                  align_cfg=None, use_kernel=fabric_mod.UNSET,
-                 interpret=fabric_mod.UNSET, fabric=None):
+                 interpret=fabric_mod.UNSET, fabric=None, mesh=None,
+                 pipeline_depth: int = 1, flowcell=None):
         import warnings
 
         from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
@@ -64,9 +96,36 @@ class AdaptiveSamplingEngine:
         self.panel = TargetPanel.build(reference, target_intervals)
         mapper = PrefixMapper(self.panel, align_cfg or PREFIX_ALIGN_CFG,
                               fabric=self.fabric)
+        self.flowcell = None
+        if flowcell is not None and flowcell is not False:
+            from repro.data.flowcell import FlowcellConfig, FlowcellSimulator
+            if flowcell is True:
+                fc_cfg = FlowcellConfig(channels=channels)
+            elif isinstance(flowcell, FlowcellConfig):
+                # same conflict rule as the dict spelling below: never
+                # silently override a user-visible channel count
+                if flowcell.channels != channels:
+                    raise ValueError(
+                        f"flowcell channels={flowcell.channels} conflicts "
+                        f"with engine channels={channels}; set one of them "
+                        f"(or omit 'channels' in a dict spelling)")
+                fc_cfg = flowcell
+            else:
+                kw = dict(flowcell)
+                fc_channels = kw.pop("channels", channels)
+                if fc_channels != channels:
+                    raise ValueError(
+                        f"flowcell channels={fc_channels} conflicts with "
+                        f"engine channels={channels}; set one of them")
+                fc_cfg = FlowcellConfig(channels=channels, **kw)
+            self.flowcell = FlowcellSimulator(
+                self.panel.reference, fc_cfg,
+                target_mask=self.panel.target_mask)
         self.runtime = AdaptiveSamplingRuntime(
             params, bc_cfg, mapper, policy or PolicyConfig(),
-            channels=channels, chunk_samples=chunk, fabric=self.fabric)
+            channels=channels, chunk_samples=chunk, fabric=self.fabric,
+            mesh=resolve_lane_mesh(mesh, channels),
+            pipeline_depth=pipeline_depth, source=self.flowcell)
 
     @property
     def telemetry(self):
@@ -117,21 +176,43 @@ class AdaptiveSamplingEngine:
     "default": {"channels": 32, "chunk": 256},
     "smoke": {"channels": 4, "chunk": 128},
     "edge_int8": {"channels": 32, "chunk": 256, "quantize": "int8"},
+    # a full 512-channel flowcell on the deterministic step encoder + its
+    # exact hand-built decoder CNN: meaningful accept/eject decisions out
+    # of the box, no training required
+    "flowcell_512": {"channels": 512, "chunk": 256,
+                     "flowcell": {"encoder": "step", "n_reads": 1024},
+                     "pipeline_depth": 2, "mesh": "auto"},
+    "flowcell_smoke": {"channels": 64, "chunk": 128,
+                       "flowcell": {"encoder": "step", "n_reads": 128,
+                                    "read_len": (96, 192)},
+                       "pipeline_depth": 2},
 })
 def build_adaptive_sampling(params=None, cfg=None, reference=None,
                             targets=None, *, channels: int, chunk: int,
                             quantize=None, policy=None, align_cfg=None,
                             use_kernel=fabric_mod.UNSET,
                             interpret=fabric_mod.UNSET, fabric=None,
-                            seed: int = 0):
+                            mesh=None, pipeline_depth: int = 1,
+                            flowcell=None, seed: int = 0):
     """Builder: supply trained (params, cfg) + reference/targets, or get a
     fresh CNN over a random reference with the first quarter as target.
     ``quantize="int8"`` (the ``edge_int8`` preset) stores the CNN weights
-    int8 once; the Read-Until loop then basecalls on fixed-point MACs."""
+    int8 once; the Read-Until loop then basecalls on fixed-point MACs.
+    ``flowcell=`` turns the engine into an N-channel flowcell server (see
+    the ``flowcell_512`` preset); a step-encoded flowcell with no explicit
+    params gets the exact :func:`repro.data.flowcell.step_basecaller`."""
     import jax
 
     from repro.core import basecaller as bc
     from repro.engine.base import quantize_edge_params
+    fc_encoder = None
+    if isinstance(flowcell, dict):
+        fc_encoder = flowcell.get("encoder")
+    elif flowcell is not None and flowcell is not False and flowcell is not True:
+        fc_encoder = getattr(flowcell, "encoder", None)
+    if params is None and cfg is None and fc_encoder == "step":
+        from repro.data.flowcell import step_basecaller
+        cfg, params = step_basecaller()
     if cfg is None:
         cfg = bc.BasecallerConfig()
     if params is None:
@@ -147,4 +228,5 @@ def build_adaptive_sampling(params=None, cfg=None, reference=None,
     return AdaptiveSamplingEngine(
         params, cfg, reference, targets, channels=channels, chunk=chunk,
         policy=policy, align_cfg=align_cfg, use_kernel=use_kernel,
-        interpret=interpret, fabric=fabric)
+        interpret=interpret, fabric=fabric, mesh=mesh,
+        pipeline_depth=pipeline_depth, flowcell=flowcell)

@@ -86,13 +86,33 @@ class SlotScheduler:
             if not self.queue or self.n_busy >= self.depth:
                 break
             if self.active[s] is None:
-                item = self.queue.popleft()
-                stored = wrap(s, item) if wrap is not None else item
-                self.active[s] = stored
-                self._fifo.append(s)
-                self.admitted_total += 1
-                out.append((s, stored))
+                out.append((s, self._place(s, self.queue.popleft(), wrap)))
         return out
+
+    def _place(self, slot: int, item: Any,
+               wrap: Optional[Callable[[int, Any], Any]]) -> Any:
+        """Occupy a free slot: the one bookkeeping tail shared by queue
+        admission and direct assignment."""
+        stored = wrap(slot, item) if wrap is not None else item
+        self.active[slot] = stored
+        self._fifo.append(slot)
+        self.admitted_total += 1
+        return stored
+
+    def assign(self, slot: int, item: Any,
+               wrap: Optional[Callable[[int, Any], Any]] = None) -> Any:
+        """Place ``item`` directly into a specific free slot, bypassing the
+        queue — for callers where slot identity is physical (a flowcell
+        channel whose pore just recovered).  Same invariants as ``admit``:
+        the slot must be free and the depth bound holds.  Returns the
+        stored object."""
+        if not 0 <= slot < self.slots:
+            raise ValueError(f"slot {slot} out of range 0..{self.slots - 1}")
+        if self.active[slot] is not None:
+            raise ValueError(f"slot {slot} is already occupied")
+        if self.n_busy >= self.depth:
+            raise ValueError(f"depth bound {self.depth} reached")
+        return self._place(slot, item, wrap)
 
     def release(self, slot: int) -> Any:
         """Free a slot and return what it held; the slot is immediately

@@ -62,6 +62,7 @@ class Telemetry:
     counters: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)
     stage_s: dict = dataclasses.field(default_factory=dict)
+    gauges: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         # kernel-dispatch accounting: snapshot the process-wide compute-
@@ -93,6 +94,11 @@ class Telemetry:
 
     def count(self, name: str, n: int = 1) -> None:
         self.counters[name] += n
+
+    def gauge(self, name: str, value: float) -> None:
+        """Point-in-time quantity (per-channel occupancy, queue depth, ...):
+        the latest value wins, unlike monotonically accumulating counters."""
+        self.gauges[name] = value
 
     @contextlib.contextmanager
     def stage(self, name: str):
@@ -132,6 +138,7 @@ class Telemetry:
             "completed": self.completed,
         }
         out.update({f"stage_{k}_s": v for k, v in self.stage_s.items()})
+        out.update(self.gauges)
         out.update(self.counters)
         out.update(self.fabric_counters())
         return out

@@ -265,13 +265,9 @@ def _seq_parallel_decode_attn(q, kc, vc, pos, cfg: ModelConfig, mesh,
     in_specs = (P(batch_spec), P(batch_spec, seq_spec),
                 P(batch_spec, seq_spec), P(batch_spec))
     out_specs = P(batch_spec)
-    if hasattr(jax, "shard_map"):  # jax >= 0.5
-        mapped = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                               out_specs=out_specs, check_vma=False)
-    else:
-        from jax.experimental.shard_map import shard_map as _shard_map
-        mapped = _shard_map(local, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_rep=False)
+    from repro.distributed.sharding import shard_map_compat
+    mapped = shard_map_compat(local, mesh, in_specs=in_specs,
+                              out_specs=out_specs)
     return mapped(q, kc, vc, pos)
 
 

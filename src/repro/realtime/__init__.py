@@ -5,12 +5,15 @@ Closes the sense -> basecall -> map -> decide loop the SoC is built for:
   session.py   per-channel read sessions + completed-read records
   policy.py    ACCEPT / EJECT / WAIT decision rule + configuration
   mapper.py    prefix mapping against a target panel (FM-index + banded DP)
-  runtime.py   batched stateful streaming runtime over a channel pool
+  runtime.py   batched stateful streaming runtime over a channel pool,
+               flowcell-scale: one lane-state pytree, shard_map over a
+               lane mesh, double-buffered admission, flowcell sources
 """
 from repro.realtime.mapper import (MapResult, PrefixMapper,  # noqa: F401
                                    PREFIX_ALIGN_CFG, TargetPanel)
 from repro.realtime.policy import (Decision, PolicyConfig,  # noqa: F401
                                    decide)
-from repro.realtime.runtime import AdaptiveSamplingRuntime  # noqa: F401
+from repro.realtime.runtime import (AdaptiveSamplingRuntime,  # noqa: F401
+                                    build_step_fn, init_lane_state)
 from repro.realtime.session import (ChannelSession, ReadRecord,  # noqa: F401
                                     SimulatedRead)

@@ -9,8 +9,7 @@ closes that loop on top of the existing pieces:
   * **stateful chunked basecalling** — ``basecaller.apply_stream`` carries
     each conv layer's K-stride overlap rows across chunk boundaries, so a
     growing read is basecalled incrementally at O(chunk) per tick instead of
-    re-running the CNN over the read-so-far (O(read) per tick, O(read^2)
-    total);
+    re-running the CNN over the read-so-far;
   * **incremental CTC collapse** — ``ctc.greedy_decode_stream`` carries one
     class per channel across chunks;
   * **on-the-fly mapping** — ``PrefixMapper`` (FM-index seeds + banded
@@ -19,24 +18,49 @@ closes that loop on top of the existing pieces:
     ACCEPT / EJECT / WAIT; EJECT frees the channel after an eject-latency
     penalty and banks the molecule's remaining signal as saved.
 
+**Flowcell scale.**  All per-lane device state — conv carries, the CTC
+``prev_class`` carry, and the per-lane policy counters (bases called, ticks
+since reset) — lives in a single pytree (:func:`init_lane_state`) whose
+leading axis is the channel lane.  The per-tick compute is one jitted step
+(basecall + CTC collapse + counter update) over every lane at once; given a
+``mesh`` (see :func:`repro.distributed.sharding.lane_mesh`) the step is
+wrapped in ``shard_map`` with lanes sharded across devices and params
+replicated — the default single-device runtime is exactly the 1-device
+degenerate case of the same program.  Host-side work (admission, sensing,
+mapping, decisions) can be double-buffered against device compute with
+``pipeline_depth=2``: the tick-t basecall is dispatched asynchronously and
+tick t-1's tokens are mapped/decided while it runs.  Decisions and reasons
+per read are identical to the synchronous runtime (same evidence, same
+rule); the only difference is that a deciding lane streams one extra chunk
+before the outcome lands — real Read-Until decision latency.  The pending
+in-flight tick is flushed by ``flush()`` (``run``/``drain`` call it) so
+telemetry never drops the final partial tick's observations.
+
+A :class:`repro.data.flowcell.FlowcellSimulator` can be attached as
+``source``: free channels then poll it for staggered, arrival-ordered reads
+(pore lifecycle: sequencing -> ejected -> recovering -> next capture), and
+every decision reports back the pore-time the molecule still holds — so
+eject decisions genuinely buy channel throughput.  Without a source the
+runtime serves its submit queue, which makes a plain
+``AdaptiveSamplingRuntime(channels=N)`` the 1-device, queue-fed alias of a
+flowcell lane pool.
+
 Channel-lane bookkeeping (admission, recycling) is the shared
 :class:`repro.engine.scheduler.SlotScheduler`; accounting is the shared
-:class:`repro.engine.telemetry.Telemetry` (decision latency -> weighted
-latency observations, plus per-stage wall time for sense / basecall / map).
-Every device call is fixed-shape (idle channel lanes are zero-filled and
-their outputs ignored; lanes are reset when a new read is assigned), so the
-jitted basecall / seed-search / extension functions each compile exactly
-once per run — the software analogue of the SoC's statically provisioned
-MAT/ED engines.
+:class:`repro.engine.telemetry.Telemetry`.  Every device call is
+fixed-shape (idle channel lanes are zero-filled and their outputs ignored;
+lanes are reset when a new read is assigned), so the jitted step compiles
+exactly once per run — the software analogue of the SoC's statically
+provisioned MAT/ED engines.
 """
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import basecaller as bc
 from repro.core import ctc
@@ -49,35 +73,121 @@ from repro.realtime.policy import Decision, PolicyConfig
 from repro.realtime.session import ChannelSession, ReadRecord, SimulatedRead
 
 
+def init_lane_state(cfg: bc.BasecallerConfig, channels: int) -> dict:
+    """The per-lane device state pytree, lane-major on every leaf.
+
+    ``conv``        per-layer (lanes, K-stride, Cin) streaming carries
+    ``prev_class``  (lanes,) CTC collapse carry (BLANK at read start)
+    ``bases``       (lanes,) bases called since lane reset (policy counter)
+    ``ticks``       (lanes,) device steps since lane reset
+
+    Every leaf zeroes on lane reset (BLANK == 0), so recycling a lane is one
+    scatter over the whole tree; every leaf shards over the lane axis under
+    ``shard_map``.
+    """
+    return {
+        "conv": bc.init_stream_state(cfg, channels),
+        "prev_class": jnp.full((channels,), ctc.BLANK, jnp.int32),
+        "bases": jnp.zeros((channels,), jnp.int32),
+        "ticks": jnp.zeros((channels,), jnp.int32),
+    }
+
+
+def build_step_fn(cfg: bc.BasecallerConfig, fabric: fabric_mod.FabricPolicy,
+                  mesh=None):
+    """One jitted tick over all lanes: basecall + CTC collapse + counters.
+
+    ``(params, lane_state, rows, frame_pads) -> (tokens, lens, lane_state')``
+    with every argument/result lane-major.  With a mesh, the step runs under
+    ``shard_map``: lane-major leaves shard over the lane axis, params
+    replicate, and no collectives are needed (lanes are independent) — so
+    the sharded program is arithmetically identical to the sequential one.
+    """
+    def step(params, lane, rows, frame_pads):
+        logits, conv = bc.apply_stream_core(params, lane["conv"], rows,
+                                            cfg=cfg, fabric=fabric)
+        tokens, lens, prev = ctc.greedy_decode_stream(
+            logits, lane["prev_class"], frame_pads)
+        new_lane = {
+            "conv": conv,
+            "prev_class": prev,
+            "bases": lane["bases"] + lens.astype(jnp.int32),
+            "ticks": lane["ticks"] + 1,
+        }
+        return tokens, lens, new_lane
+
+    if mesh is not None:
+        from repro.distributed.sharding import LANE_AXIS, shard_map_compat
+        lane_p = P(LANE_AXIS)
+        # pytree-prefix specs: one P() replicates the whole params tree, one
+        # lane spec shards every lane-major leaf of the state tree
+        step = shard_map_compat(step, mesh,
+                                in_specs=(P(), lane_p, lane_p, lane_p),
+                                out_specs=(lane_p, lane_p, lane_p))
+    return jax.jit(step)
+
+
 class AdaptiveSamplingRuntime:
     """Manages a pool of concurrent channel sessions with streaming state."""
 
     def __init__(self, params, cfg: bc.BasecallerConfig, mapper: PrefixMapper,
                  policy: PolicyConfig = PolicyConfig(), *, channels: int = 32,
                  chunk_samples: int = 256, use_kernel=fabric_mod.UNSET,
-                 fabric=None):
+                 fabric=None, mesh=None, pipeline_depth: int = 1,
+                 source=None):
         if chunk_samples % cfg.total_stride:
             raise ValueError(
                 f"chunk_samples={chunk_samples} must be a multiple of the "
                 f"basecaller total_stride={cfg.total_stride}")
+        if pipeline_depth not in (1, 2):
+            raise ValueError(f"pipeline_depth must be 1 or 2, "
+                             f"got {pipeline_depth}")
+        if mesh is not None and channels % mesh.size:
+            raise ValueError(
+                f"channels={channels} must divide evenly over the "
+                f"{mesh.size}-device lane mesh")
+        if source is not None and source.config.channels != channels:
+            raise ValueError(
+                f"flowcell source has {source.config.channels} channels, "
+                f"runtime has {channels}")
         self.params = params
         self.cfg = cfg
         self.mapper = mapper
         self.policy = policy
         self.channels = channels
         self.chunk_samples = chunk_samples
+        self.mesh = mesh
+        self.pipeline_depth = pipeline_depth
         # basecall placement: fabric policy (``use_kernel=`` is a shim)
         self.fabric = fabric_mod.as_policy(fabric_mod.legacy_policy(
             "AdaptiveSamplingRuntime", use_kernel, fabric=fabric))
-        self._apply = functools.partial(bc.apply_stream, cfg=cfg,
-                                        fabric=self.fabric)
-        self.state = bc.init_stream_state(cfg, channels)
-        self.prev_class = jnp.full((channels,), ctc.BLANK, jnp.int32)
+        self._step = build_step_fn(cfg, self.fabric, mesh)
+        self.lane_state = init_lane_state(cfg, channels)
         # channel lanes: slot = sensor channel, payload = ChannelSession
         self.scheduler = SlotScheduler(channels)
         self.records: list[ReadRecord] = []
         self.telemetry = Telemetry(workload="adaptive_sampling")
+        self._source = source
+        self._pending = None            # in-flight tick awaiting map/decide
+        self._ticks = 0                 # flowcell time, in chunks (incl idle)
+        self._busy_ticks = np.zeros(channels, np.int64)
+        self._lane_reads = np.zeros(channels, np.int64)
         self._warm = False
+
+    # -------------------------------------------------- compat aliases --
+    @property
+    def state(self):
+        """Per-layer conv carries (pre-flowcell name; lanes-major)."""
+        return self.lane_state["conv"]
+
+    @property
+    def prev_class(self):
+        return self.lane_state["prev_class"]
+
+    @property
+    def flowcell_samples(self) -> int:
+        """Flowcell time: every tick advances each channel by one chunk."""
+        return self._ticks * self.chunk_samples
 
     def warmup(self) -> None:
         """Compile every jitted path once, before any session is timed.
@@ -89,9 +199,10 @@ class AdaptiveSamplingRuntime:
         if self._warm:
             return
         rows = jnp.zeros((self.channels, self.chunk_samples), jnp.float32)
-        logits, _ = self._apply(self.params, self.state, rows)
-        pads = jnp.zeros(logits.shape[:2], jnp.float32)
-        tokens, _, _ = ctc.greedy_decode_stream(logits, self.prev_class, pads)
+        pads = jnp.zeros((self.channels,
+                          self.chunk_samples // self.cfg.total_stride),
+                         jnp.float32)
+        tokens, _, _ = self._step(self.params, self.lane_state, rows, pads)
         jax.block_until_ready(tokens)
         self.mapper.map_prefixes(
             np.zeros((self.channels, self.policy.map_prefix_bases), np.int32))
@@ -99,6 +210,15 @@ class AdaptiveSamplingRuntime:
 
     # ------------------------------------------------------------ intake --
     def submit(self, read: SimulatedRead) -> None:
+        """Queue a read for the next free lane (queue-fed mode only: a
+        source-fed flowcell owns its channels' pore lifecycle, and a
+        queue-admitted read would land on a pore the simulator still
+        considers recovering and corrupt its ready_at clock)."""
+        if self._source is not None:
+            raise ValueError(
+                "runtime is source-fed (flowcell attached): reads arrive by "
+                "pore capture, not submit(); build without flowcell= for "
+                "queue-fed serving")
         self.scheduler.submit(read)
 
     def submit_all(self, reads) -> None:
@@ -107,19 +227,41 @@ class AdaptiveSamplingRuntime:
 
     # ------------------------------------------------------ lane control --
     def _reset_lanes(self, lanes: list[int]) -> None:
-        """Zero the conv carries + CTC carry of channels starting a new read."""
+        """Zero every lane-state leaf of channels starting a new read: conv
+        carries, CTC carry (BLANK == 0), and the per-lane counters."""
         if not lanes:
             return
         idx = jnp.asarray(np.asarray(lanes, np.int32))
-        self.state = [s.at[idx].set(0) for s in self.state]
-        self.prev_class = self.prev_class.at[idx].set(ctc.BLANK)
+        self.lane_state = jax.tree.map(lambda s: s.at[idx].set(0),
+                                       self.lane_state)
 
-    def _assign_free(self) -> None:
+    def _poll_source(self) -> list[int]:
+        """Capture the next arrival-ordered molecule on every recovered
+        channel (flowcell mode only); returns the freshly occupied lanes."""
+        src = self._source
+        if src is None:
+            return []
+        t = self.flowcell_samples
+        now = time.perf_counter()
+        active = self.scheduler.active
+        fresh = []
+        for b in range(self.channels):
+            if active[b] is not None:
+                continue
+            read = src.next_read(b, t)
+            if read is None:
+                continue
+            self.scheduler.assign(b, ChannelSession(channel=b, read=read,
+                                                    started_wall=now))
+            fresh.append(b)
+        return fresh
+
+    def _assign_free(self) -> list[int]:
         now = time.perf_counter()
         fresh = self.scheduler.admit(
             wrap=lambda b, read: ChannelSession(channel=b, read=read,
                                                 started_wall=now))
-        self._reset_lanes([b for b, _ in fresh])
+        return [b for b, _ in fresh]
 
     def _finish(self, b: int, decision: Decision, reason: str,
                 mapped_pos: int, now: float) -> None:
@@ -131,6 +273,13 @@ class AdaptiveSamplingRuntime:
             # accept / exhausted: the molecule is sequenced to completion
             # (fast-forwarded here; the decision loop is done with it).
             consumed = total
+        if self._source is not None:
+            # the pore stays on the molecule for the signal it still has to
+            # sequence after the decision — ejects hand the channel back
+            # almost immediately, accepts hold it for the whole remainder
+            self._source.read_done(b, self.flowcell_samples,
+                                   consumed - s.offset)
+        self._lane_reads[b] += 1
         rec = ReadRecord(
             channel=b, read_id=s.read.read_id, decision=decision,
             reason=reason, bases_at_decision=int(len(s.bases)),
@@ -154,17 +303,103 @@ class AdaptiveSamplingRuntime:
             tel.observe_latency(rec.decision_ms)
 
     # ------------------------------------------------------------- ticks --
+    def _process_pending(self) -> None:
+        p, self._pending = self._pending, None
+        if p is not None:
+            self._process_one(p)
+
+    def _process_one(self, p: dict) -> None:
+        """Map + decide on one dispatched tick's basecalls.
+
+        With ``pipeline_depth=2`` this runs one tick behind the device (the
+        double buffer); with depth 1 it runs inside the same tick.  Reads
+        whose decision evidence is here but whose lane has already streamed
+        a newer chunk simply finish with that chunk counted as consumed —
+        the decision itself is identical either way.
+        """
+        tel = self.telemetry
+        sessions = p["sessions"]
+        with tel.stage("basecall"):
+            # blocks on the device step dispatched when p was created
+            tokens_np = np.asarray(p["tokens"])
+            lens_np = np.asarray(p["lens"])
+            bases_np = np.asarray(p["bases"])
+        active = self.scheduler.active
+        for b, s in sessions.items():
+            if active[b] is not s:     # lane already recycled (defensive)
+                continue
+            n = int(lens_np[b])
+            s.append_bases(tokens_np[b, :n])
+            tel.bases += n
+
+        # map + decide on channels with a long-enough called prefix; the
+        # prefix length comes from the sharded per-lane counter (bit-equal
+        # to len(session.bases) — the lane pytree is the source of truth)
+        map_len = self.policy.map_prefix_bases
+        cand = [b for b, s in sessions.items()
+                if active[b] is s
+                and bases_np[b] >= self.policy.min_prefix_bases]
+        if cand:
+            prefixes = np.zeros((self.channels, map_len), np.int32)
+            prefix_lens = np.zeros((self.channels,), np.int64)
+            for b in cand:
+                # latest window, not the literal prefix: a WAIT retry then
+                # maps fresh bases instead of re-trying identical evidence
+                window = sessions[b].bases[-map_len:]
+                prefixes[b, :len(window)] = window
+                prefix_lens[b] = int(bases_np[b])
+            with tel.stage("map"):
+                res = self.mapper.map_prefixes(prefixes)
+                decisions, reasons = policy_mod.decide(
+                    res.mapped, res.on_target, res.mapq, prefix_lens,
+                    self.policy)
+            now = time.perf_counter()
+            for b in cand:
+                if decisions[b] is not Decision.WAIT:
+                    self._finish(b, decisions[b], reasons[b],
+                                 res.positions[b], now)
+
+        # reads that ran dry without a decision were sequenced in full —
+        # judged on the offset at this evidence tick's dispatch, so a lane
+        # whose *newer* in-flight chunk is the final one is not finished
+        # early (its last bases are still on the device)
+        now = time.perf_counter()
+        for b, s in sessions.items():
+            if active[b] is s and p["offsets"][b] >= s.read.total_samples:
+                self._finish(b, Decision.ACCEPT, "exhausted", -1, now)
+
+    def flush(self) -> None:
+        """Resolve the in-flight double-buffered tick (if any) so telemetry
+        and records cover every dispatched observation.  ``run``/``drain``
+        call this; it is also safe to call at any point mid-run."""
+        self._process_pending()
+
     def tick(self) -> bool:
         """Advance every busy channel by one chunk; returns False when idle."""
         self.warmup()
         t0 = time.perf_counter()
-        self._assign_free()
+        tel = self.telemetry
+        # one reset scatter covers both intake paths
+        self._reset_lanes(self._poll_source() + self._assign_free())
         sessions = self.scheduler.active
         busy = self.scheduler.busy
         if not busy:
-            return False
-        tel = self.telemetry
+            # whatever is still in flight belongs to released sessions
+            # (every live session keeps its lane busy): sync and discard
+            self._process_pending()
+            src = self._source
+            if (not self.scheduler.pending
+                    and (src is None or src.exhausted)):
+                return False
+            # channels recovering while the source still holds molecules:
+            # flowcell time advances
+            self._ticks += 1
+            tel.count("idle_ticks")
+            tel.wall_s += time.perf_counter() - t0
+            return True
         tel.steps += 1
+        self._ticks += 1
+        self._busy_ticks[busy] += 1
 
         # 1. sense: one fixed-shape chunk matrix across all channels.  A
         # read's final partial chunk is zero-filled; frames derived from the
@@ -181,67 +416,56 @@ class AdaptiveSamplingRuntime:
                 s.offset = min(s.offset + self.chunk_samples,
                                s.read.total_samples)
 
-        # 2. stateful basecall + incremental CTC collapse
+        # 2. dispatch the stateful basecall + CTC collapse for every lane.
+        # jax dispatch is asynchronous: the arrays in ``pending`` are
+        # futures, so the host returns from the dispatch immediately.
         with tel.stage("basecall"):
-            logits, self.state = self._apply(self.params, self.state,
-                                             jnp.asarray(rows))
-            tokens, lens, self.prev_class = ctc.greedy_decode_stream(
-                logits, self.prev_class, jnp.asarray(frame_pads))
-            tokens_np = np.asarray(tokens)
-            lens_np = np.asarray(lens)
+            tokens, lens, self.lane_state = self._step(
+                self.params, self.lane_state, jnp.asarray(rows),
+                jnp.asarray(frame_pads))
         tel.dispatches += 1
-        for b in busy:
-            n = int(lens_np[b])
-            sessions[b].append_bases(tokens_np[b, :n])
-            tel.bases += n
-
-        # 3. map + decide on channels with a long-enough called prefix:
-        # mapping starts at min_prefix_bases (shorter windows are tail
-        # zero-padded); map_prefix_bases is the full window size
-        map_len = self.policy.map_prefix_bases
-        cand = [b for b in busy
-                if len(sessions[b].bases) >= self.policy.min_prefix_bases]
-        if cand:
-            prefixes = np.zeros((self.channels, map_len), np.int32)
-            prefix_lens = np.zeros((self.channels,), np.int64)
-            for b in cand:
-                # latest window, not the literal prefix: a WAIT retry then
-                # maps fresh bases instead of re-trying identical evidence
-                window = sessions[b].bases[-map_len:]
-                prefixes[b, :len(window)] = window
-                prefix_lens[b] = len(sessions[b].bases)
-            with tel.stage("map"):
-                res = self.mapper.map_prefixes(prefixes)
-                decisions, reasons = policy_mod.decide(
-                    res.mapped, res.on_target, res.mapq, prefix_lens,
-                    self.policy)
-            now = time.perf_counter()
-            for b in cand:
-                if decisions[b] is not Decision.WAIT:
-                    self._finish(b, decisions[b], reasons[b],
-                                 res.positions[b], now)
-
-        # 4. reads that ran dry without a decision were sequenced in full
-        now = time.perf_counter()
-        for b in busy:
-            s = sessions[b]
-            if s is not None and s.exhausted:
-                self._finish(b, Decision.ACCEPT, "exhausted", -1, now)
+        prev = self._pending
+        self._pending = {
+            "tokens": tokens, "lens": lens,
+            "bases": self.lane_state["bases"],
+            "sessions": {b: sessions[b] for b in busy},
+            "offsets": {b: sessions[b].offset for b in busy},
+        }
+        if self.pipeline_depth == 1:
+            self._process_pending()
+        elif prev is not None:
+            # the double buffer: map + decide tick t-1's tokens on the host
+            # while the device runs the step just dispatched for tick t
+            self._process_one(prev)
 
         tel.wall_s += time.perf_counter() - t0
         return True
 
     def run(self, max_ticks: int = 100_000) -> dict:
         while self.tick():
-            if self.telemetry.steps >= max_ticks:
+            if self._ticks >= max_ticks:
                 break
+        # flush the in-flight tick BEFORE reading the report: the final
+        # (possibly partial) tick's decisions and latency observations must
+        # land in Telemetry, or report counts trail submitted reads
+        self.flush()
         return self.report()
 
     # ----------------------------------------------------------- metrics --
     def report(self) -> dict:
-        out = self.telemetry.summary()
+        tel = self.telemetry
+        if self._ticks:
+            occ = self._busy_ticks / self._ticks
+            tel.gauge("occupancy_mean", float(occ.mean()))
+            tel.gauge("occupancy_min", float(occ.min()))
+            tel.gauge("occupancy_max", float(occ.max()))
+            tel.gauge("flowcell_ticks", self._ticks)
+            tel.gauge("flowcell_samples", self.flowcell_samples)
+        tel.gauge("pore_time_saved_samples", tel.samples_saved)
+        tel.gauge("reads_per_channel_mean", float(self._lane_reads.mean()))
+        out = tel.summary()
         # domain-named aliases kept alongside the unified telemetry keys
-        out["reads"] = self.telemetry.completed
+        out["reads"] = tel.completed
         out["decision_p50_ms"] = out["p50_ms"]
         out["decision_p99_ms"] = out["p99_ms"]
         for k in ("accepted", "ejected", "timeouts", "exhausted"):

@@ -223,3 +223,141 @@ class TestRuntime:
             AdaptiveSamplingRuntime(params, cfg, PrefixMapper(panel),
                                     PolicyConfig(), channels=2,
                                     chunk_samples=130)
+
+    def test_pipelined_report_counts_match_submitted(self, rng):
+        """Double-buffered runtime: the final in-flight tick's observations
+        are flushed by run(), so report counts equal submitted reads and
+        the decision-latency aliases cover every decided read."""
+        runtime, rng = self._runtime(rng, Decision.EJECT)
+        runtime.pipeline_depth = 2
+        n = 7
+        runtime.submit_all([
+            SimulatedRead(signal=rng.normal(size=700).astype(np.float32),
+                          read_id=i) for i in range(n)])
+        report = runtime.run(max_ticks=500)
+        assert report["reads"] == n
+        assert len(runtime.records) == n
+        assert (report["accepted"] + report["ejected"] + report["timeouts"]
+                + report["exhausted"]) == n
+        decided = (report["accepted"] + report["ejected"]
+                   + report["timeouts"])
+        assert len(runtime.telemetry.latencies_ms) == decided
+
+
+# --------------------------------------------------- lane recycling (CTC) --
+class TestLaneRecycleCTC:
+    """A recycled lane must start its successor read from a clean slate:
+    prev_class back to BLANK (or the first base of the new read can be
+    swallowed by the CTC collapse) and zero conv carries (or the ejected
+    read's final samples leak into the successor's first frames)."""
+
+    def test_stream_carry_swallows_repeat_without_reset(self):
+        # read A ended on class 2; read B opens with class 2.  Without the
+        # BLANK reset the collapse drops B's first base — with it, B keeps it.
+        logits = jnp.zeros((1, 4, 5)).at[:, :2, 2].set(10.0) \
+                                     .at[:, 2:, 3].set(10.0)
+        stale_prev = jnp.asarray([2], jnp.int32)        # carry from read A
+        tk, ln, _ = ctc.greedy_decode_stream(logits, stale_prev)
+        assert ln.tolist() == [1] and tk[0, 0] == 3     # 'C' swallowed
+        fresh_prev = jnp.asarray([ctc.BLANK], jnp.int32)
+        tk, ln, _ = ctc.greedy_decode_stream(logits, fresh_prev)
+        assert ln.tolist() == [2]
+        assert tk[0, :2].tolist() == [2, 3]             # 'C' then 'G'
+
+    def _runtime(self, rng, channels=2):
+        cfg = bc.BasecallerConfig(kernels=(5, 3), channels=(16, 5),
+                                  strides=(1, 2))
+        params = bc.init(jax.random.key(0), cfg)
+        panel = TargetPanel.build(G.random_genome(rng, 4_000), [(0, 1_000)])
+        policy = PolicyConfig(min_prefix_bases=16, map_prefix_bases=24,
+                              max_prefix_bases=48, eject_latency_samples=32)
+        return AdaptiveSamplingRuntime(
+            params, cfg, PrefixMapper(panel), policy, channels=channels,
+            chunk_samples=128)
+
+    def test_reset_lanes_zeroes_every_pytree_leaf(self, rng):
+        runtime = self._runtime(rng)
+        runtime.submit(SimulatedRead(
+            signal=rng.normal(size=300).astype(np.float32), read_id=0))
+        runtime.tick()   # pollute lane 0 mid-read: carries + counters live
+        state = runtime.lane_state
+        assert any(np.abs(np.asarray(s[0])).sum() > 0 for s in state["conv"])
+        assert int(np.asarray(state["bases"])[0]) >= 0
+        assert int(np.asarray(state["ticks"])[0]) == 1
+        runtime._reset_lanes([0])
+        state = runtime.lane_state
+        for leaf in jax.tree.leaves(state):
+            np.testing.assert_array_equal(np.asarray(leaf[0]),
+                                          np.zeros_like(leaf[0]))
+        assert int(np.asarray(state["prev_class"])[0]) == ctc.BLANK
+
+    def test_recycled_lane_matches_fresh_runtime(self, rng):
+        """End-to-end recycle oracle: the bases a successor read gets on a
+        just-recycled lane equal the bases it gets on a virgin runtime —
+        no sample leak, no swallowed first base."""
+        sig_a = rng.normal(size=640).astype(np.float32)
+        sig_b = rng.normal(size=640).astype(np.float32)
+        recycled = self._runtime(np.random.default_rng(5), channels=1)
+        recycled.submit_all([
+            SimulatedRead(signal=sig_a, read_id=0),
+            SimulatedRead(signal=sig_b, read_id=1)])
+        recycled.run(max_ticks=200)
+        assert len(recycled.records) == 2
+        fresh = self._runtime(np.random.default_rng(5), channels=1)
+        fresh.submit(SimulatedRead(signal=sig_b, read_id=1))
+        fresh.run(max_ticks=200)
+        rec_b = [r for r in recycled.records if r.read_id == 1]
+        frs_b = [r for r in fresh.records if r.read_id == 1]
+        assert len(rec_b) == 1 and len(frs_b) == 1
+        assert rec_b[0].decision == frs_b[0].decision
+        assert rec_b[0].reason == frs_b[0].reason
+        assert rec_b[0].bases_at_decision == frs_b[0].bases_at_decision
+        assert rec_b[0].mapped_pos == frs_b[0].mapped_pos
+
+    def test_mid_chunk_recycle_isolates_successor(self, rng):
+        """Eject mid-chunk (final partial chunk zero-filled): the successor
+        on the same lane decodes identically to a fresh single-lane stream
+        of the same read."""
+        cfg = bc.BasecallerConfig(kernels=(5, 3), channels=(16, 5),
+                                  strides=(1, 2))
+        params = bc.init(jax.random.key(0), cfg)
+        chunk = 64
+        # read A is shorter than one chunk: its lane sees zero-fill + pad
+        # frames, then is recycled for read B mid-stream
+        sig_a = rng.normal(size=40).astype(np.float32)
+        sig_b = rng.normal(size=128).astype(np.float32)
+        state = bc.init_stream_state(cfg, 1)
+        prev = jnp.full((1,), ctc.BLANK, jnp.int32)
+        pads = np.zeros((1, chunk // cfg.total_stride), np.float32)
+        pads_a = pads.copy()
+        pads_a[0, len(sig_a) // cfg.total_stride:] = 1.0
+        rows = np.zeros((1, chunk), np.float32)
+        rows[0, :len(sig_a)] = sig_a
+        y_a, state = bc.apply_stream(params, state, jnp.asarray(rows), cfg,
+                                     fabric="reference")
+        _, _, prev = ctc.greedy_decode_stream(y_a, prev, jnp.asarray(pads_a))
+        # read A's padded tail forced its frames to BLANK
+        assert int(np.asarray(prev)[0]) == ctc.BLANK
+        # recycle the lane exactly as the runtime does
+        state = [s.at[jnp.asarray([0])].set(0) for s in state]
+        prev = prev.at[0].set(ctc.BLANK)
+        got = []
+        for lo in (0, 64):
+            y, state = bc.apply_stream(
+                params, state, jnp.asarray(sig_b[None, lo:lo + 64]), cfg,
+                fabric="reference")
+            tk, ln, prev = ctc.greedy_decode_stream(y, prev,
+                                                    jnp.asarray(pads))
+            got.extend(np.asarray(tk[0][: int(ln[0])]).tolist())
+        # oracle: virgin single-lane stream over read B
+        state2 = bc.init_stream_state(cfg, 1)
+        prev2 = jnp.full((1,), ctc.BLANK, jnp.int32)
+        want = []
+        for lo in (0, 64):
+            y, state2 = bc.apply_stream(
+                params, state2, jnp.asarray(sig_b[None, lo:lo + 64]), cfg,
+                fabric="reference")
+            tk, ln, prev2 = ctc.greedy_decode_stream(y, prev2,
+                                                     jnp.asarray(pads))
+            want.extend(np.asarray(tk[0][: int(ln[0])]).tolist())
+        assert got == want

@@ -1,0 +1,141 @@
+"""Property-based invariants for the shared SlotScheduler.
+
+The scheduler is load-bearing for every engine (LM decode slots, basecall
+batches, flowcell channel lanes): random submit / admit / assign / release /
+recycle sequences must never double-assign a slot, never exceed the depth
+bound, keep the occupancy FIFO truthful, and always drain to empty.  Uses
+the optional-hypothesis shim so tier-1 stays green without hypothesis.
+"""
+import sys
+import os
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import pytest
+
+from optional_hypothesis import given, settings, st
+from repro.engine.scheduler import SlotScheduler
+
+
+def _check_invariants(s: SlotScheduler, model: dict):
+    """Cross-check the scheduler against a naive occupancy model."""
+    busy = {b for b in range(s.slots) if s.active[b] is not None}
+    assert busy == set(model), "occupancy diverged from model"
+    assert s.n_busy == len(model)
+    assert s.n_busy <= s.depth, "depth bound exceeded"
+    assert sorted(s._fifo) == sorted(model), "FIFO lost/duplicated a slot"
+    assert len(set(s._fifo)) == len(s._fifo), "slot appears twice in FIFO"
+    assert s.admitted_total - s.released_total == s.n_busy
+    if model:
+        assert s.oldest() == next(iter(s._fifo))
+    else:
+        assert s.oldest() is None
+
+
+OPS = st.lists(
+    st.tuples(st.sampled_from(["submit", "admit", "assign", "release",
+                               "recycle"]),
+              st.integers(0, 7)),
+    min_size=1, max_size=200)
+
+
+@settings(max_examples=60, deadline=None)
+@given(slots=st.integers(1, 8), depth=st.integers(0, 8), ops=OPS,
+       payload=st.integers(0, 1000))
+def test_random_sequences_hold_invariants(slots, depth, ops, payload):
+    depth = min(depth, slots) or None
+    s = SlotScheduler(slots, depth=depth)
+    model: dict[int, object] = {}
+    fed = 0
+    for op, arg in ops:
+        if op == "submit":
+            s.submit(("req", fed))
+            fed += 1
+        elif op == "admit":
+            before_free = [b for b in range(s.slots) if s.active[b] is None]
+            fresh = s.admit()
+            for b, item in fresh:
+                assert b in before_free, "admitted into an occupied slot"
+                assert b not in model, "double-assigned a slot"
+                model[b] = item
+            # admit is maximal: it stops only on empty queue/slots/depth
+            if s.pending:
+                assert s.n_busy == min(s.depth, s.slots) or \
+                    all(s.active[b] is not None for b in range(s.slots))
+        elif op == "assign":
+            slot = arg % s.slots
+            free = s.active[slot] is None and s.n_busy < s.depth
+            if free:
+                item = ("direct", payload, arg)
+                assert s.assign(slot, item) is item
+                model[slot] = item
+            else:
+                with pytest.raises(ValueError):
+                    s.assign(slot, ("direct", payload, arg))
+        elif op == "release":
+            slot = arg % s.slots
+            if slot in model:
+                assert s.release(slot) is model.pop(slot)
+            else:
+                with pytest.raises(ValueError):
+                    s.release(slot)
+        elif op == "recycle":
+            # release the oldest and immediately reuse the slot (the
+            # continuous-batching move every engine leans on)
+            b = s.oldest()
+            if b is not None:
+                s.release(b)
+                del model[b]
+                item = ("recycled", arg)
+                s.assign(b, item)
+                model[b] = item
+        _check_invariants(s, model)
+
+    # drain always empties: alternate admit / release-oldest; this must
+    # terminate in at most (pending + busy) * 2 rounds
+    rounds = 2 * (s.pending + s.n_busy) + 2
+    for _ in range(rounds):
+        if s.drained:
+            break
+        for b, item in s.admit():
+            model[b] = item
+        b = s.oldest()
+        if b is not None:
+            s.release(b)
+            del model[b]
+        _check_invariants(s, model)
+    assert s.drained, "drain failed to empty the scheduler"
+    assert s.pending == 0 and s.n_busy == 0
+    assert all(x is None for x in s.active)
+    assert s.admitted_total == s.released_total
+
+
+@settings(max_examples=30, deadline=None)
+@given(slots=st.integers(2, 8), burst=st.integers(1, 40))
+def test_depth_one_serializes(slots, burst):
+    """depth=1 is strict one-at-a-time serving regardless of slot count."""
+    s = SlotScheduler(slots, depth=1)
+    for i in range(burst):
+        s.submit(i)
+    served = []
+    while not s.drained:
+        fresh = s.admit()
+        assert len(fresh) <= 1 and s.n_busy <= 1
+        if fresh:
+            served.append(s.release(fresh[0][0]))
+    assert served == list(range(burst)), "FIFO order violated"
+
+
+def test_assign_validates_without_hypothesis():
+    """Example-based pin of assign() errors (runs even without hypothesis)."""
+    s = SlotScheduler(2, depth=1)
+    s.assign(1, "a")
+    with pytest.raises(ValueError):
+        s.assign(1, "b")          # occupied
+    with pytest.raises(ValueError):
+        s.assign(0, "c")          # depth bound
+    with pytest.raises(ValueError):
+        s.assign(5, "d")          # out of range
+    assert s.release(1) == "a"
+    s.assign(0, "c")
+    assert s.busy == [0]
