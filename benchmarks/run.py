@@ -24,7 +24,11 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
   bench_flowcell         flowcell-scale Read-Until: aggregate bases/s vs
                          channel count (and vs lane-mesh size when multiple
                          devices exist) on the deterministic step encoder —
-                         the CI flowcell-smoke artifact (BENCH_flowcell.json)
+                         the CI flowcell-smoke artifact (BENCH_flowcell.json).
+                         Ends with the obs-overhead pair (traced vs untraced
+                         bases/s, acceptance: within 5%) and exports the
+                         traced run's trace_flowcell.json (Chrome trace,
+                         Perfetto-loadable) + timeseries_flowcell.jsonl
 """
 from __future__ import annotations
 

@@ -8,6 +8,12 @@ The accuracy-vs-energy quantization table renders the rows
 
   PYTHONPATH=src python -m repro.analysis.report --section quant \
       --quant BENCH_quant.json
+
+The trace section summarizes an exported Chrome trace (span stats by track,
+per-read decision breakdown) from ``--trace`` / the flowcell benchmark:
+
+  PYTHONPATH=src python -m repro.analysis.report --section trace \
+      --trace trace_flowcell.json
 """
 from __future__ import annotations
 
@@ -144,16 +150,77 @@ def quant_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def trace_tables(doc: dict) -> str:
+    """Span/event statistics from an exported Chrome trace document: one
+    row per (process, event name) with counts and X-span duration stats,
+    plus the per-read decision breakdown from matched read B/E spans."""
+    from repro.obs.trace import read_spans
+    pids = {e["pid"]: e["args"]["name"]
+            for e in doc.get("traceEvents", [])
+            if e.get("ph") == "M" and e.get("name") == "process_name"}
+    stats: dict = {}
+    for e in doc.get("traceEvents", []):
+        ph = e.get("ph")
+        if ph in ("M", "E"):
+            continue
+        key = (pids.get(e["pid"], str(e["pid"])), e["name"], ph)
+        s = stats.setdefault(key, {"n": 0, "dur_us": []})
+        s["n"] += 1
+        if ph == "X":
+            s["dur_us"].append(e.get("dur", 0.0))
+    lines = ["| process | event | ph | count | mean ms | max ms |",
+             "|---|---|---|---|---|---|"]
+    for (proc, name, ph), s in sorted(stats.items()):
+        durs = s["dur_us"]
+        mean = f"{sum(durs) / len(durs) / 1e3:.3f}" if durs else "—"
+        mx = f"{max(durs) / 1e3:.3f}" if durs else "—"
+        lines.append(f"| {proc} | {name} | {ph} | {s['n']} "
+                     f"| {mean} | {mx} |")
+    spans = read_spans(doc)
+    if spans:
+        by_dec: dict = {}
+        for s in spans:
+            dec = s["args"].get("decision", "open")
+            d = by_dec.setdefault(dec, {"n": 0, "dur": [], "saved": 0})
+            d["n"] += 1
+            d["dur"].append(s["dur_us"])
+            d["saved"] += int(s["args"].get("samples_saved", 0))
+        lines.append("\n**Per-read spans** (matched B/E, correlated by "
+                     "read_id):\n")
+        lines.append("| decision | reads | mean span ms | samples saved |")
+        lines.append("|---|---|---|---|")
+        for dec, d in sorted(by_dec.items()):
+            lines.append(f"| {dec} | {d['n']} "
+                         f"| {sum(d['dur']) / len(d['dur']) / 1e3:.2f} "
+                         f"| {d['saved']} |")
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--single", default="dryrun_report.json")
     ap.add_argument("--multi", default="dryrun_report_multi.json")
     ap.add_argument("--quant", default="BENCH_quant.json",
                     help="rows from benchmarks/run.py --only quant --json")
+    ap.add_argument("--trace", default="trace_flowcell.json",
+                    help="Chrome trace JSON (serve --trace / the flowcell "
+                         "benchmark's traced run)")
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "fractions",
-                             "quant"])
+                             "quant", "trace"])
     args = ap.parse_args()
+    if args.section == "trace":
+        try:
+            with open(args.trace) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            raise SystemExit(
+                f"{args.trace} not found — export one with "
+                "`repro.launch.serve --trace PATH` or "
+                "`benchmarks/run.py --only flowcell`")
+        print("### Trace — span statistics\n")
+        print(trace_tables(doc))
+        return
     if args.section == "quant":
         try:
             with open(args.quant) as f:

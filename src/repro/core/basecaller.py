@@ -108,14 +108,15 @@ def apply(params, signal: jax.Array, cfg: BasecallerConfig = BasecallerConfig(),
     DeprecationWarning shim.
     """
     pol = _resolve_policy("basecaller.apply", use_kernel, fabric)
+    scopes = fabric_mod.active_scopes()
     if padding == "stream":
         state = init_stream_state(cfg, signal.shape[0])
         logits, _ = _apply_stream_jit(params, state, signal, cfg=cfg,
-                                      fabric=pol)
+                                      fabric=pol, scopes=scopes)
         return logits
     if padding != "same":
         raise ValueError(padding)
-    return _apply_jit(params, signal, cfg=cfg, fabric=pol)
+    return _apply_jit(params, signal, cfg=cfg, fabric=pol, scopes=scopes)
 
 
 def _conv1x1_as_matmul(x, w, b, activation, fabric):
@@ -136,9 +137,15 @@ def _conv1x1_as_matmul(x, w, b, activation, fabric):
     return y.reshape(bsz, t, w.shape[-1])
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "fabric"))
+@functools.partial(jax.jit, static_argnames=("cfg", "fabric", "scopes"))
 def _apply_jit(params, signal, *, cfg: BasecallerConfig,
-               fabric: fabric_mod.FabricPolicy):
+               fabric: fabric_mod.FabricPolicy, scopes=()):
+    # ``scopes`` is cache-key-only: this jit is shared process-wide, so the
+    # active fabric counter scopes (captured into the execution-time counting
+    # callbacks at trace time) must be part of the cache key — otherwise two
+    # engines with identical (cfg, fabric) would replay each other's
+    # per-engine dispatch attribution (see fabric.ScopedCounters).
+    del scopes
     x = signal[..., None] if signal.ndim == 2 else signal
     x = x.astype(cfg.dtype)
     n = len(cfg.kernels)
@@ -185,7 +192,8 @@ def apply_stream(params, state, chunk: jax.Array,
     over the whole read — each chunk costs O(chunk), not O(read-so-far).
     """
     pol = _resolve_policy("basecaller.apply_stream", use_kernel, fabric)
-    return _apply_stream_jit(params, state, chunk, cfg=cfg, fabric=pol)
+    return _apply_stream_jit(params, state, chunk, cfg=cfg, fabric=pol,
+                             scopes=fabric_mod.active_scopes())
 
 
 def apply_stream_core(params, state, chunk, *, cfg: BasecallerConfig,
@@ -219,8 +227,12 @@ def apply_stream_core(params, state, chunk, *, cfg: BasecallerConfig,
     return x, new_state
 
 
-_apply_stream_jit = jax.jit(apply_stream_core,
-                            static_argnames=("cfg", "fabric"))
+@functools.partial(jax.jit, static_argnames=("cfg", "fabric", "scopes"))
+def _apply_stream_jit(params, state, chunk, *, cfg: BasecallerConfig,
+                      fabric: fabric_mod.FabricPolicy, scopes=()):
+    # cache-key-only ``scopes``: same reasoning as _apply_jit
+    del scopes
+    return apply_stream_core(params, state, chunk, cfg=cfg, fabric=fabric)
 
 
 def layer_inputs(params, signal: jax.Array,

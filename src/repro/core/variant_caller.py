@@ -125,12 +125,16 @@ def apply(params, windows: jax.Array, cfg: CallerConfig = CallerConfig(),
     """
     pol = fabric_mod.as_policy(fabric_mod.legacy_policy(
         "variant_caller.apply", use_kernel, fabric=fabric))
-    return _apply_jit(params, windows, cfg=cfg, fabric=pol)
+    return _apply_jit(params, windows, cfg=cfg, fabric=pol,
+                      scopes=fabric_mod.active_scopes())
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "fabric"))
+@functools.partial(jax.jit, static_argnames=("cfg", "fabric", "scopes"))
 def _apply_jit(params, windows, *, cfg: CallerConfig,
-               fabric: fabric_mod.FabricPolicy):
+               fabric: fabric_mod.FabricPolicy, scopes=()):
+    # cache-key-only: pins the active fabric counter scopes per cache entry
+    # (see repro.core.basecaller._apply_jit)
+    del scopes
     x = windows.astype(cfg.dtype)
     for i in range(len(cfg.channels)):
         p = params[f"conv{i + 1}"]

@@ -70,7 +70,7 @@ class AdaptiveSamplingEngine:
                  channels: int = 32, chunk: int = 256, policy=None,
                  align_cfg=None, use_kernel=fabric_mod.UNSET,
                  interpret=fabric_mod.UNSET, fabric=None, mesh=None,
-                 pipeline_depth: int = 1, flowcell=None):
+                 pipeline_depth: int = 1, flowcell=None, trace=False):
         import warnings
 
         from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
@@ -125,7 +125,8 @@ class AdaptiveSamplingEngine:
             params, bc_cfg, mapper, policy or PolicyConfig(),
             channels=channels, chunk_samples=chunk, fabric=self.fabric,
             mesh=resolve_lane_mesh(mesh, channels),
-            pipeline_depth=pipeline_depth, source=self.flowcell)
+            pipeline_depth=pipeline_depth, source=self.flowcell,
+            tracer=trace)
 
     @property
     def telemetry(self):
@@ -193,7 +194,7 @@ def build_adaptive_sampling(params=None, cfg=None, reference=None,
                             use_kernel=fabric_mod.UNSET,
                             interpret=fabric_mod.UNSET, fabric=None,
                             mesh=None, pipeline_depth: int = 1,
-                            flowcell=None, seed: int = 0):
+                            flowcell=None, seed: int = 0, trace=False):
     """Builder: supply trained (params, cfg) + reference/targets, or get a
     fresh CNN over a random reference with the first quarter as target.
     ``quantize="int8"`` (the ``edge_int8`` preset) stores the CNN weights
@@ -229,4 +230,4 @@ def build_adaptive_sampling(params=None, cfg=None, reference=None,
         params, cfg, reference, targets, channels=channels, chunk=chunk,
         policy=policy, align_cfg=align_cfg, use_kernel=use_kernel,
         interpret=interpret, fabric=fabric, mesh=mesh,
-        pipeline_depth=pipeline_depth, flowcell=flowcell)
+        pipeline_depth=pipeline_depth, flowcell=flowcell, trace=trace)

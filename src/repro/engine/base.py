@@ -40,9 +40,13 @@ class EngineBase:
 
     workload: str = ""
 
-    def __init__(self, *, slots: int, depth: int | None = None):
-        self.scheduler = SlotScheduler(slots, depth=depth)
-        self.telemetry = Telemetry(workload=self.workload)
+    def __init__(self, *, slots: int, depth: int | None = None,
+                 tracer=None):
+        self.telemetry = Telemetry(workload=self.workload, tracer=tracer)
+        self.scheduler = SlotScheduler(
+            slots, depth=depth,
+            on_event=self.telemetry.tracer.scheduler_hook(
+                self.telemetry.trace_pid))
 
     def submit(self, item: Any, **kwargs: Any) -> None:
         self.scheduler.submit(item)
@@ -57,6 +61,7 @@ class EngineBase:
         while not self.scheduler.drained and steps < max_steps:
             if not self.step():
                 break
+            self.telemetry.tick_export()
             steps += 1
         return self.summary()
 

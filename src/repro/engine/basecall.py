@@ -30,9 +30,9 @@ class BasecallEngine(EngineBase):
     workload = "basecall"
 
     def __init__(self, params, bc_cfg, *, batch: int, chunk: int,
-                 use_kernel=fabric_mod.UNSET, fabric=None):
+                 use_kernel=fabric_mod.UNSET, fabric=None, trace=False):
         from repro.core import basecaller, ctc
-        super().__init__(slots=batch)
+        super().__init__(slots=batch, tracer=trace)
         self.params = params
         self.cfg = bc_cfg
         self.batch = batch
@@ -64,11 +64,12 @@ class BasecallEngine(EngineBase):
         t_wall = time.perf_counter()
         chunk_rows = np.stack([row for _, row in admitted])
         t0 = time.perf_counter()
-        with self.telemetry.stage("basecall"):
-            logits = self._apply(self.params, jnp.asarray(chunk_rows))
-        with self.telemetry.stage("decode"):
-            tokens, lens = self._decode(logits)
-            tokens.block_until_ready()
+        with self.telemetry.scope():
+            with self.telemetry.stage("basecall"):
+                logits = self._apply(self.params, jnp.asarray(chunk_rows))
+            with self.telemetry.stage("decode"):
+                tokens, lens = self._decode(logits)
+                tokens.block_until_ready()
         dt = (time.perf_counter() - t0) * 1e3
         # one latency observation per dispatch, weighted by rows served
         self.telemetry.observe_latency(dt, weight=len(chunk_rows))
@@ -82,6 +83,7 @@ class BasecallEngine(EngineBase):
             self.scheduler.release(slot)
         self.telemetry.samples += int(chunk_rows.size)
         self.telemetry.wall_s += time.perf_counter() - t_wall
+        self.telemetry.gauge("queue_depth", self.scheduler.pending)
         return True
 
     def serve(self, signal_chunks: np.ndarray) -> list[np.ndarray]:
@@ -108,11 +110,13 @@ class BasecallEngine(EngineBase):
 })
 def build_basecall(params=None, cfg=None, *, batch: int, chunk: int,
                    quantize: str | None = None,
-                   use_kernel=fabric_mod.UNSET, fabric=None, seed: int = 0):
+                   use_kernel=fabric_mod.UNSET, fabric=None, seed: int = 0,
+                   trace=False):
     """Builder: supply trained (params, cfg) or get a fresh paper-shaped CNN.
 
     ``quantize="int8"`` (the ``edge_int8`` preset) calibrates and quantizes
-    the weights once at build; already-quantized params pass through."""
+    the weights once at build; already-quantized params pass through.
+    ``trace`` enables span tracing (True, or a shared Tracer)."""
     from repro.core import basecaller as bc
     from repro.engine.base import quantize_edge_params
     if cfg is None:
@@ -123,4 +127,4 @@ def build_basecall(params=None, cfg=None, *, batch: int, chunk: int,
         params = quantize_edge_params(params, cfg, scheme=quantize,
                                       chunk=chunk, seed=seed)
     return BasecallEngine(params, cfg, batch=batch, chunk=chunk,
-                          use_kernel=use_kernel, fabric=fabric)
+                          use_kernel=use_kernel, fabric=fabric, trace=trace)

@@ -36,9 +36,9 @@ class LMDecodeEngine(EngineBase):
     workload = "lm_decode"
 
     def __init__(self, model, params, cfg, *, slots: int, max_len: int,
-                 eos: int = -1, fabric=None):
+                 eos: int = -1, fabric=None, trace=False):
         from repro.kernels import fabric as fabric_mod
-        super().__init__(slots=slots)
+        super().__init__(slots=slots, tracer=trace)
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -62,12 +62,25 @@ class LMDecodeEngine(EngineBase):
     def slots(self) -> int:
         return self.scheduler.slots
 
+    def _slot_tid(self, s: int) -> int:
+        return self.telemetry.tracer.tid(self.telemetry.trace_pid,
+                                         f"slot{s:02d}")
+
     def submit(self, req: Request, **_) -> None:
         req.submitted_at = time.perf_counter()
         self.scheduler.submit(req)
 
     def _admit(self) -> None:
+        tracer, pid = self.telemetry.tracer, self.telemetry.trace_pid
         for s, req in self.scheduler.admit():
+            if tracer.enabled:
+                # per-request lifecycle span on the slot's own track,
+                # closed when the request finishes (see step)
+                tracer.begin("request", pid=pid, tid=self._slot_tid(s),
+                             cat="request",
+                             args={"uid": req.uid,
+                                   "prompt_len": len(req.prompt),
+                                   "max_new_tokens": req.max_new_tokens})
             # prefill: feed prompt tokens one by one (simple, exact)
             logits = None
             with self.telemetry.stage("prefill"):
@@ -87,19 +100,21 @@ class LMDecodeEngine(EngineBase):
     def step(self) -> bool:
         """One decode step across all active slots."""
         t0 = time.perf_counter()
-        self._admit()
-        active = self.scheduler.active
-        if self.scheduler.n_busy == 0:
-            return False
-        toks = np.zeros((self.slots, 1), np.int32)
-        for s, req in enumerate(active):
-            if req is not None and req.tokens_out:
-                toks[s, 0] = req.tokens_out[-1]
-        with self.telemetry.stage("decode"):
-            logits, self.cache = self._step(self.params, self.cache,
-                                            jnp.asarray(toks),
-                                            jnp.asarray(self.pos))
-            logits_np = np.asarray(logits[:, -1])
+        with self.telemetry.scope():
+            self._admit()
+            active = self.scheduler.active
+            if self.scheduler.n_busy == 0:
+                return False
+            toks = np.zeros((self.slots, 1), np.int32)
+            for s, req in enumerate(active):
+                if req is not None and req.tokens_out:
+                    toks[s, 0] = req.tokens_out[-1]
+            with self.telemetry.stage("decode"):
+                logits, self.cache = self._step(self.params, self.cache,
+                                                jnp.asarray(toks),
+                                                jnp.asarray(self.pos))
+                logits_np = np.asarray(logits[:, -1])
+        tracer, pid = self.telemetry.tracer, self.telemetry.trace_pid
         self.telemetry.dispatches += 1
         self.telemetry.steps += 1
         for s, req in enumerate(active):
@@ -120,6 +135,12 @@ class LMDecodeEngine(EngineBase):
                 self.telemetry.completed += 1
                 self.telemetry.observe_latency(
                     (req.done_at - req.submitted_at) * 1e3)
+                if tracer.enabled:
+                    tracer.end(pid=pid, tid=self._slot_tid(s),
+                               args={"tokens": len(req.tokens_out),
+                                     "eos": hit_eos})
+        self.telemetry.gauge("queue_depth", self.scheduler.pending)
+        self.telemetry.gauge("slots_busy", self.scheduler.n_busy)
         self.telemetry.wall_s += time.perf_counter() - t0
         return True
 
@@ -132,7 +153,7 @@ class LMDecodeEngine(EngineBase):
 def build_lm_decode(model=None, params=None, cfg=None, *,
                     arch: str = "qwen3-4b", smoke: bool = True,
                     slots: int, max_len: int, eos: int = -1, fabric=None,
-                    seed: int = 0):
+                    seed: int = 0, trace=False):
     """Builder: supply (model, params, cfg) or let the preset pick an arch
     (smoke config by default) and initialize fresh params."""
     if cfg is None:
@@ -145,4 +166,4 @@ def build_lm_decode(model=None, params=None, cfg=None, *,
     if params is None:
         params, _ = model.init(jax.random.key(seed), cfg)
     return LMDecodeEngine(model, params, cfg, slots=slots, max_len=max_len,
-                         eos=eos, fabric=fabric)
+                         eos=eos, fabric=fabric, trace=trace)

@@ -31,11 +31,11 @@ class PathogenPipelineEngine(EngineBase):
 
     def __init__(self, params, bc_cfg=None, *, depth: int = 2,
                  use_kernel=fabric_mod.UNSET, fabric=None, panel=None,
-                 detect_cfg=None):
+                 detect_cfg=None, trace=False):
         from repro.core import basecaller as bc
         bc_cfg = bc_cfg if bc_cfg is not None else bc.BasecallerConfig()
         # the slot pool IS the in-flight bound: one slot per in-flight job
-        super().__init__(slots=depth)
+        super().__init__(slots=depth, tracer=trace)
         self.params = params
         self.cfg = bc_cfg
         # MAT/ED placement for basecall + panel compare: one fabric policy
@@ -55,15 +55,17 @@ class PathogenPipelineEngine(EngineBase):
         tel = self.telemetry
         tel.count("chunks")
         tel.samples += int(np.asarray(chunk).size)
-        with tel.stage("normalize"):
-            sig = jnp.asarray(normalize_chunk(np.asarray(chunk)))
-        with tel.stage("basecall"):
-            logits = self._bc.apply(self.params, sig, self.cfg,
-                                    fabric=self.fabric)
-        tel.dispatches += 1
-        self.scheduler.submit(logits)   # async: device still computing
-        while not self.scheduler.admit():
-            self._drain_one()           # at depth: host-decode the oldest
+        with tel.scope():
+            with tel.stage("normalize"):
+                sig = jnp.asarray(normalize_chunk(np.asarray(chunk)))
+            with tel.stage("basecall"):
+                logits = self._bc.apply(self.params, sig, self.cfg,
+                                        fabric=self.fabric)
+            tel.dispatches += 1
+            self.scheduler.submit(logits)   # async: device still computing
+            while not self.scheduler.admit():
+                self._drain_one()       # at depth: host-decode the oldest
+        tel.gauge("in_flight", self.scheduler.n_busy)
         tel.wall_s += time.perf_counter() - t0
 
     def _drain_one(self) -> tuple[np.ndarray, np.ndarray]:
@@ -85,7 +87,8 @@ class PathogenPipelineEngine(EngineBase):
         if self.scheduler.n_busy == 0:
             return False
         t0 = time.perf_counter()
-        self._drain_one()
+        with self.telemetry.scope():
+            self._drain_one()
         self.telemetry.wall_s += time.perf_counter() - t0
         return True
 
@@ -107,7 +110,7 @@ class PathogenPipelineEngine(EngineBase):
         if self.panel is None:
             raise ValueError("no pathogen panel configured for this engine")
         from repro.core import pathogen
-        with self.telemetry.stage("classify"):
+        with self.telemetry.scope(), self.telemetry.stage("classify"):
             report = pathogen.detect(
                 self.panel, self.reads(read_len),
                 self.detect_cfg or pathogen.DetectConfig(), mode=mode,
@@ -123,7 +126,8 @@ class PathogenPipelineEngine(EngineBase):
 def build_pathogen_pipeline(params=None, cfg=None, *, depth: int,
                             quantize: str | None = None,
                             use_kernel=fabric_mod.UNSET, fabric=None,
-                            panel=None, detect_cfg=None, seed: int = 0):
+                            panel=None, detect_cfg=None, seed: int = 0,
+                            trace=False):
     """Builder: supply trained (params, cfg) — and a ``pathogen.Panel`` to
     enable ``detect`` — or get a fresh paper-shaped CNN.  ``quantize=
     "int8"`` (the ``edge_int8`` preset) stores the CNN weights int8 once."""
@@ -137,4 +141,5 @@ def build_pathogen_pipeline(params=None, cfg=None, *, depth: int,
         params = quantize_edge_params(params, cfg, scheme=quantize, seed=seed)
     return PathogenPipelineEngine(params, cfg, depth=depth,
                                   use_kernel=use_kernel, fabric=fabric,
-                                  panel=panel, detect_cfg=detect_cfg)
+                                  panel=panel, detect_cfg=detect_cfg,
+                                  trace=trace)

@@ -27,7 +27,8 @@ from typing import Any, Callable, Iterable, Optional
 class SlotScheduler:
     """Admission + recycling + bounded depth over a fixed slot pool."""
 
-    def __init__(self, slots: int, *, depth: Optional[int] = None):
+    def __init__(self, slots: int, *, depth: Optional[int] = None,
+                 on_event: Optional[Callable[[str, int], None]] = None):
         if slots <= 0:
             raise ValueError(f"slots must be positive, got {slots}")
         if depth is not None and not (0 < depth <= slots):
@@ -39,6 +40,10 @@ class SlotScheduler:
         self._fifo: collections.deque[int] = collections.deque()  # oldest first
         self.admitted_total = 0
         self.released_total = 0
+        # observability hook: called as on_event(kind, slot) after every
+        # state transition — kind is "admit" (from queue), "assign" (direct
+        # placement), or "release" (see Tracer.scheduler_hook)
+        self.on_event = on_event
 
     # ------------------------------------------------------------ intake --
     def submit(self, item: Any) -> None:
@@ -90,13 +95,16 @@ class SlotScheduler:
         return out
 
     def _place(self, slot: int, item: Any,
-               wrap: Optional[Callable[[int, Any], Any]]) -> Any:
+               wrap: Optional[Callable[[int, Any], Any]],
+               kind: str = "admit") -> Any:
         """Occupy a free slot: the one bookkeeping tail shared by queue
         admission and direct assignment."""
         stored = wrap(slot, item) if wrap is not None else item
         self.active[slot] = stored
         self._fifo.append(slot)
         self.admitted_total += 1
+        if self.on_event is not None:
+            self.on_event(kind, slot)
         return stored
 
     def assign(self, slot: int, item: Any,
@@ -112,7 +120,7 @@ class SlotScheduler:
             raise ValueError(f"slot {slot} is already occupied")
         if self.n_busy >= self.depth:
             raise ValueError(f"depth bound {self.depth} reached")
-        return self._place(slot, item, wrap)
+        return self._place(slot, item, wrap, kind="assign")
 
     def release(self, slot: int) -> Any:
         """Free a slot and return what it held; the slot is immediately
@@ -123,4 +131,6 @@ class SlotScheduler:
         self.active[slot] = None
         self._fifo.remove(slot)
         self.released_total += 1
+        if self.on_event is not None:
+            self.on_event("release", slot)
         return item

@@ -10,6 +10,15 @@ Routes through ``repro.engine.build``; pick a workload and a preset:
       --preset smoke --requests 16
   PYTHONPATH=src python -m repro.launch.serve --workload pathogen_pipeline \
       --requests 4
+
+Observability flags (see :mod:`repro.obs`):
+
+  --trace PATH       export a Chrome trace-event JSON of the run (open at
+                     https://ui.perfetto.dev)
+  --timeseries PATH  stream per-interval delta snapshots as JSONL
+  --monitor          live TTY dashboard (bases/s sparkline, occupancy,
+                     moving counters) while the run drains
+  --profile-dir DIR  capture a jax.profiler device trace around the run
 """
 from __future__ import annotations
 
@@ -73,6 +82,17 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=None)
     ap.add_argument("--max-len", type=int, default=None)
     ap.add_argument("--new-tokens", type=int, default=8)
+    # observability (repro.obs)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome trace-event JSON of the run")
+    ap.add_argument("--timeseries", default=None, metavar="PATH",
+                    help="stream per-interval delta snapshots as JSONL")
+    ap.add_argument("--monitor", action="store_true",
+                    help="live TTY dashboard while the run drains")
+    ap.add_argument("--interval", type=float, default=0.5,
+                    help="time-series / dashboard snapshot interval (s)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace around the run")
     args = ap.parse_args()
 
     overrides: dict = {"seed": args.seed}
@@ -84,10 +104,27 @@ def main() -> None:
         overrides["slots"] = args.slots
     if args.max_len is not None:
         overrides["max_len"] = args.max_len
+    if args.trace is not None:
+        overrides["trace"] = True
 
     eng = engine_api.build(args.workload, preset=args.preset, **overrides)
+    tel = eng.telemetry
+    if args.timeseries or args.monitor:
+        from repro.obs import TimeSeriesExporter
+        tel.exporter = TimeSeriesExporter(
+            tel, scheduler=eng.scheduler, interval_s=args.interval,
+            path=args.timeseries, dashboard=args.monitor)
     rng = np.random.default_rng(args.seed)
-    report = _DRIVERS[args.workload](eng, args, rng)
+    from repro.obs import jax_profile_window
+    with jax_profile_window(args.profile_dir):
+        report = _DRIVERS[args.workload](eng, args, rng)
+    if tel.exporter is not None:
+        tel.exporter.close()
+    if args.trace is not None:
+        doc = tel.tracer.export_chrome(args.trace)
+        n = sum(1 for e in doc["traceEvents"] if e.get("ph") != "M")
+        print(f"trace: {n} events -> {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
     if args.json:
         print(json.dumps(report, default=float, indent=2))
     else:

@@ -1,0 +1,23 @@
+"""repro.obs — tracing, bounded metrics, and live time-series export.
+
+The paper's SoC exposes a hardware perf-counter bank because real-time
+Read-Until viability is a latency-budget question: a decision that lands
+after the pore has read past the prefix saves nothing.  This package is the
+software analogue of that counter bank, wired through every engine:
+
+  trace.py    per-read span tracer -> Chrome trace-event JSON (Perfetto)
+  metrics.py  bounded, mergeable primitives (log-bucketed histogram,
+              counters, gauges) for long-running flowcells + fleet rollups
+  export.py   periodic per-tick delta snapshots -> JSONL time series and
+              the ``--monitor`` live TTY dashboard
+  validate.py schema checks for the exported artifacts (CI gate)
+
+:class:`repro.engine.telemetry.Telemetry` is a facade over these
+primitives; engines opt into tracing with ``repro.engine.build(...,
+trace=True)``.
+"""
+from repro.obs.metrics import (Counters, Gauges, LogHistogram,  # noqa: F401
+                               weighted_percentile)
+from repro.obs.trace import (NULL_TRACER, Tracer, as_tracer,  # noqa: F401
+                             jax_profile_window, validate_chrome_trace)
+from repro.obs.export import TimeSeriesExporter, TTYDashboard  # noqa: F401

@@ -134,7 +134,7 @@ class AdaptiveSamplingRuntime:
                  policy: PolicyConfig = PolicyConfig(), *, channels: int = 32,
                  chunk_samples: int = 256, use_kernel=fabric_mod.UNSET,
                  fabric=None, mesh=None, pipeline_depth: int = 1,
-                 source=None):
+                 source=None, tracer=None):
         if chunk_samples % cfg.total_stride:
             raise ValueError(
                 f"chunk_samples={chunk_samples} must be a multiple of the "
@@ -163,10 +163,14 @@ class AdaptiveSamplingRuntime:
             "AdaptiveSamplingRuntime", use_kernel, fabric=fabric))
         self._step = build_step_fn(cfg, self.fabric, mesh)
         self.lane_state = init_lane_state(cfg, channels)
-        # channel lanes: slot = sensor channel, payload = ChannelSession
-        self.scheduler = SlotScheduler(channels)
         self.records: list[ReadRecord] = []
-        self.telemetry = Telemetry(workload="adaptive_sampling")
+        self.telemetry = Telemetry(workload="adaptive_sampling",
+                                   tracer=tracer)
+        self._trace = self.telemetry.tracer
+        self._pid = self.telemetry.trace_pid
+        # channel lanes: slot = sensor channel, payload = ChannelSession
+        self.scheduler = SlotScheduler(
+            channels, on_event=self._trace.scheduler_hook(self._pid))
         self._source = source
         self._pending = None            # in-flight tick awaiting map/decide
         self._ticks = 0                 # flowcell time, in chunks (incl idle)
@@ -202,10 +206,16 @@ class AdaptiveSamplingRuntime:
         pads = jnp.zeros((self.channels,
                           self.chunk_samples // self.cfg.total_stride),
                          jnp.float32)
-        tokens, _, _ = self._step(self.params, self.lane_state, rows, pads)
-        jax.block_until_ready(tokens)
-        self.mapper.map_prefixes(
-            np.zeros((self.channels, self.policy.map_prefix_bases), np.int32))
+        with self.telemetry.scope():
+            # per-instance jit traces here, inside this engine's fabric
+            # scope: execution-time dispatch counters stay attributed to
+            # this runtime even when engines interleave in one process
+            tokens, _, _ = self._step(self.params, self.lane_state, rows,
+                                      pads)
+            jax.block_until_ready(tokens)
+            self.mapper.map_prefixes(
+                np.zeros((self.channels, self.policy.map_prefix_bases),
+                         np.int32))
         self._warm = True
 
     # ------------------------------------------------------------ intake --
@@ -263,6 +273,25 @@ class AdaptiveSamplingRuntime:
                                                 started_wall=now))
         return [b for b, _ in fresh]
 
+    # ------------------------------------------------------------ tracing --
+    def _lane_tid(self, b: int) -> int:
+        return self._trace.tid(self._pid, f"lane{b:03d}")
+
+    def _begin_read_spans(self, lanes: list[int]) -> None:
+        """Open one B span per freshly captured read on its lane track
+        (closed by :meth:`_finish` with the decision args — the per-read
+        lifecycle, correlated by ``read_id``)."""
+        if not self._trace.enabled or not lanes:
+            return
+        active = self.scheduler.active
+        for b in lanes:
+            s = active[b]
+            self._trace.begin(
+                "read", pid=self._pid, tid=self._lane_tid(b), cat="read",
+                args={"read_id": int(s.read.read_id), "lane": b,
+                      "total_samples": int(s.read.total_samples),
+                      "capture_tick": self._ticks})
+
     def _finish(self, b: int, decision: Decision, reason: str,
                 mapped_pos: int, now: float) -> None:
         s = self.scheduler.release(b)
@@ -288,6 +317,14 @@ class AdaptiveSamplingRuntime:
             mapped_pos=int(mapped_pos),
             decision_ms=(now - s.started_wall) * 1e3)
         self.records.append(rec)
+        if self._trace.enabled:
+            self._trace.end(
+                pid=self._pid, tid=self._lane_tid(b),
+                args={"read_id": int(s.read.read_id),
+                      "decision": decision.name, "reason": reason,
+                      "bases": int(len(s.bases)),
+                      "samples_sequenced": int(consumed),
+                      "samples_saved": int(total - consumed)})
         tel = self.telemetry
         tel.completed += 1
         tel.samples += consumed
@@ -319,11 +356,19 @@ class AdaptiveSamplingRuntime:
         """
         tel = self.telemetry
         sessions = p["sessions"]
-        with tel.stage("basecall"):
+        with tel.scope(), tel.stage("basecall"):
             # blocks on the device step dispatched when p was created
             tokens_np = np.asarray(p["tokens"])
             lens_np = np.asarray(p["lens"])
             bases_np = np.asarray(p["bases"])
+        if self._trace.enabled:
+            # completion lands one tick after dispatch under depth-2
+            # double-buffering: the args carry the evidence tick so the
+            # dispatch -> completion lag is visible in the trace
+            self._trace.instant(
+                "tick.complete", pid=self._pid,
+                tid=self._trace.tid(self._pid, "host"), cat="tick",
+                args={"evidence_tick": p["tick"], "lanes": len(sessions)})
         active = self.scheduler.active
         for b, s in sessions.items():
             if active[b] is not s:     # lane already recycled (defensive)
@@ -348,7 +393,7 @@ class AdaptiveSamplingRuntime:
                 window = sessions[b].bases[-map_len:]
                 prefixes[b, :len(window)] = window
                 prefix_lens[b] = int(bases_np[b])
-            with tel.stage("map"):
+            with tel.scope(), tel.stage("map"):
                 res = self.mapper.map_prefixes(prefixes)
                 decisions, reasons = policy_mod.decide(
                     res.mapped, res.on_target, res.mapq, prefix_lens,
@@ -380,7 +425,9 @@ class AdaptiveSamplingRuntime:
         t0 = time.perf_counter()
         tel = self.telemetry
         # one reset scatter covers both intake paths
-        self._reset_lanes(self._poll_source() + self._assign_free())
+        fresh = self._poll_source() + self._assign_free()
+        self._reset_lanes(fresh)
+        self._begin_read_spans(fresh)
         sessions = self.scheduler.active
         busy = self.scheduler.busy
         if not busy:
@@ -419,17 +466,31 @@ class AdaptiveSamplingRuntime:
         # 2. dispatch the stateful basecall + CTC collapse for every lane.
         # jax dispatch is asynchronous: the arrays in ``pending`` are
         # futures, so the host returns from the dispatch immediately.
-        with tel.stage("basecall"):
+        with tel.scope(), tel.stage("basecall"):
             tokens, lens, self.lane_state = self._step(
                 self.params, self.lane_state, jnp.asarray(rows),
                 jnp.asarray(frame_pads))
         tel.dispatches += 1
+        if self._trace.enabled:
+            # dispatch marker: processing of this tick's evidence lands in a
+            # later tick.complete under depth-2 double-buffering
+            self._trace.instant(
+                "tick.dispatch", pid=self._pid,
+                tid=self._trace.tid(self._pid, "host"), cat="tick",
+                args={"tick": self._ticks, "lanes": len(busy)})
+            self._trace.counter(
+                "lanes", {"busy": len(busy),
+                          "queue": self.scheduler.pending},
+                pid=self._pid)
+        tel.gauge("queue_depth", self.scheduler.pending)
+        tel.gauge("lanes_busy", len(busy))
         prev = self._pending
         self._pending = {
             "tokens": tokens, "lens": lens,
             "bases": self.lane_state["bases"],
             "sessions": {b: sessions[b] for b in busy},
             "offsets": {b: sessions[b].offset for b in busy},
+            "tick": self._ticks,
         }
         if self.pipeline_depth == 1:
             self._process_pending()
@@ -443,6 +504,7 @@ class AdaptiveSamplingRuntime:
 
     def run(self, max_ticks: int = 100_000) -> dict:
         while self.tick():
+            self.telemetry.tick_export()
             if self._ticks >= max_ticks:
                 break
         # flush the in-flight tick BEFORE reading the report: the final
