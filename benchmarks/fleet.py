@@ -1,0 +1,200 @@
+"""Multi-tenant fleet throughput: bursty tenants on one mesh vs solo runs.
+
+The claim this bench anchors (ISSUE-7 acceptance): when tenants are
+**bursty** — requests arrive in clumps with idle gaps between them — a
+fleet multiplexing both tenants onto one device mesh fills one tenant's
+idle slots with the other tenant's backlog, so aggregate request
+throughput beats either solo deployment.  Acceptance bar: aggregate
+requests/s >= 1.5x the *worse* of the two solo runs on the same arrival
+schedules.
+
+Three timed runs over identical pre-generated request payloads and
+wall-clock arrival schedules (4 bursts per tenant, offset so one tenant's
+gap is the other's burst):
+
+  * solo basecall  — one-tenant fleet, tenant A's schedule only;
+  * solo lm_decode — one-tenant fleet, tenant B's schedule only;
+  * 2-tenant fleet — both schedules merged, traced, exporting
+    ``trace_fleet.json`` (the CI fleet-smoke artifact) with per-tenant
+    process tracks.
+
+Reported: aggregate bases/s + tokens/s, per-tenant p50/p99 dispatch
+latency, DRR fairness ratio, and ``speedup_vs_worse_solo``.  Each run is
+driven by the same arrival loop (submit when due, step while backlogged,
+sleep only when the fleet is drained and the next burst hasn't arrived),
+so solo walls honestly include the idle gaps the fleet gets to fill.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+# arrival schedule: 6 bursts per tenant; tenant B's bursts land inside
+# tenant A's gaps (offset 0.3 * period) so the fleet has idle slots to fill
+N_BURSTS = 6
+BURST_PERIOD_S = 0.25
+B_OFFSET_S = 0.3 * BURST_PERIOD_S
+
+
+def _payloads(per_burst: int, chunk: int, vocab: int, new_tokens: int):
+    """Pre-generate every request outside the timed region."""
+    rng = np.random.default_rng(11)
+    basecall = [rng.normal(size=chunk).astype(np.float32)
+                for _ in range(N_BURSTS * per_burst)]
+    from repro.engine.lm import Request
+    lm = [Request(uid=100 + i, prompt=rng.integers(1, vocab, 4),
+                  max_new_tokens=new_tokens)
+          for i in range(N_BURSTS * per_burst)]
+    return basecall, lm
+
+
+def _schedule(payloads, per_burst: int, tenant: str, offset_s: float):
+    """[(due_s, tenant, payload)] — ``per_burst`` requests per burst."""
+    return [(offset_s + (i // per_burst) * BURST_PERIOD_S, tenant, p)
+            for i, p in enumerate(payloads)]
+
+
+def _drive(fleet, schedule) -> float:
+    """Serve a wall-clock arrival schedule; returns the measured wall.
+
+    Sleeps only when there is nothing to serve AND the next arrival is in
+    the future — the idle gaps a solo deployment cannot avoid and the
+    fleet fills with the other tenant's work.
+    """
+    schedule = sorted(schedule, key=lambda e: e[0])
+    i, t0 = 0, time.perf_counter()
+    while i < len(schedule):
+        now = time.perf_counter() - t0
+        while i < len(schedule) and schedule[i][0] <= now:
+            fleet.submit(schedule[i][1], schedule[i][2])
+            i += 1
+        if not fleet.step() and i < len(schedule):
+            wait = schedule[i][0] - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(min(wait, 0.002))
+    fleet.drain()
+    return time.perf_counter() - t0
+
+
+def _build_fleet(tenants, *, trace: bool = False):
+    """Fresh fleet + warmup (compile outside the timed region).
+
+    Basecall dispatches are shaped by the admitted row count and the
+    jitted decode cache is per-engine, so the warmup walks every batch
+    size 1..batch; the LM warmup prefills at the timed prompt length.
+    """
+    from repro.engine.lm import Request
+    from repro.fleet import Fleet
+
+    fleet = Fleet(trace=trace)
+    for name, workload in tenants:
+        fleet.add_tenant(name, workload, "smoke")
+        eng = fleet.tenants[name].engine
+        if workload == "basecall":
+            for k in range(1, eng.batch + 1):
+                fleet.submit(name, np.zeros((k, eng.chunk), np.float32))
+                fleet.drain()
+        else:
+            fleet.submit(name, Request(uid=0,
+                                       prompt=np.array([1, 2, 3, 4]),
+                                       max_new_tokens=2))
+    fleet.drain()
+    return fleet
+
+
+def _work_snapshot(fleet) -> dict:
+    """Per-tenant (bases, tokens, completed) — delta basis across warmup."""
+    return {name: (t.engine.telemetry.bases, t.engine.telemetry.tokens,
+                   t.engine.telemetry.completed)
+            for name, t in fleet.tenants.items()}
+
+
+def _timed_percentiles(fleet, marks: dict) -> dict:
+    """Per-tenant (p50, p99) over dispatch latencies observed *after* the
+    warmup mark — warmup absorbs the jit compiles, and those ~1s
+    observations would otherwise own every p99."""
+    from repro.obs.metrics import weighted_percentile
+    out = {}
+    for name, t in fleet.tenants.items():
+        hist = t.engine.telemetry.latency_hist
+        vals = hist.values[marks[name]:]
+        wts = hist.weights[marks[name]:]
+        out[name] = (weighted_percentile(vals, wts, 50),
+                     weighted_percentile(vals, wts, 99))
+    return out
+
+
+def bench_fleet(row, *, smoke: bool = False,
+                trace_path: str = "trace_fleet.json") -> None:
+    per_burst = 3 if smoke else 6
+    new_tokens = 8
+
+    # probe engine shapes once, then pre-generate all payloads
+    from repro.engine import build as build_engine
+    chunk = build_engine("basecall", "smoke").chunk
+    vocab = build_engine("lm_decode", "smoke").cfg.vocab_size
+    bc_payloads, lm_payloads = _payloads(per_burst, chunk, vocab, new_tokens)
+    sched_a = _schedule(bc_payloads, per_burst, "lab-a", 0.0)
+    sched_b = _schedule(lm_payloads, per_burst, "lab-b", B_OFFSET_S)
+    n_reqs = len(bc_payloads)
+
+    def run_once(tenants, schedule, *, trace=False):
+        fleet = _build_fleet(tenants, trace=trace)
+        before = _work_snapshot(fleet)
+        marks = {name: len(t.engine.telemetry.latency_hist.values)
+                 for name, t in fleet.tenants.items()}
+        wall = _drive(fleet, schedule)
+        work = {name: tuple(a - b for a, b in
+                            zip(_work_snapshot(fleet)[name], before[name]))
+                for name in before}
+        return fleet, wall, work, _timed_percentiles(fleet, marks)
+
+    def run(tenants, schedule, *, trace=False):
+        # best of 2 (the flowcell-bench treatment): the schedules are
+        # idle-dominated, so the wall floor is the arrival span and a
+        # single host hiccup is the only thing best-of-2 discards
+        return min((run_once(tenants, schedule, trace=trace)
+                    for _ in range(2)), key=lambda r: r[1])
+
+    # --- solo runs: each tenant alone on the mesh, same schedule ----------
+    _, wall_a, work_a, pct_a = run([("lab-a", "basecall")], sched_a)
+    bases_a = work_a["lab-a"][0]
+    row("fleet:solo:basecall", wall_a * 1e6,
+        f"reqs_per_s={n_reqs / wall_a:.1f}"
+        f";bases_per_s={bases_a / wall_a:.0f};reqs={n_reqs}"
+        f";p50_ms={pct_a['lab-a'][0]:.2f};p99_ms={pct_a['lab-a'][1]:.2f}")
+
+    _, wall_b, work_b, pct_b = run([("lab-b", "lm_decode")], sched_b)
+    tokens_b = work_b["lab-b"][1]
+    row("fleet:solo:lm_decode", wall_b * 1e6,
+        f"reqs_per_s={n_reqs / wall_b:.1f}"
+        f";tokens_per_s={tokens_b / wall_b:.0f};reqs={n_reqs}"
+        f";p50_ms={pct_b['lab-b'][0]:.2f};p99_ms={pct_b['lab-b'][1]:.2f}")
+
+    # --- the fleet: both tenants, merged schedule, traced -----------------
+    fleet, wall_f, work_f, pct_f = run(
+        [("lab-a", "basecall"), ("lab-b", "lm_decode")],
+        sched_a + sched_b, trace=True)
+    summ = fleet.summary()
+    agg_reqs = 2 * n_reqs
+    worse_solo = min(n_reqs / wall_a, n_reqs / wall_b)
+    speedup = (agg_reqs / wall_f) / worse_solo
+    row("fleet:2tenant_bursty", wall_f * 1e6,
+        f"agg_reqs_per_s={agg_reqs / wall_f:.1f}"
+        f";agg_bases_per_s={work_f['lab-a'][0] / wall_f:.0f}"
+        f";agg_tokens_per_s={work_f['lab-b'][1] / wall_f:.0f}"
+        f";fairness_ratio={summ['fleet']['fairness_ratio']:.3f}"
+        f";speedup_vs_worse_solo={speedup:.2f}"
+        f";bar=1.5;ticks={summ['fleet']['ticks']}")
+    for name in ("lab-a", "lab-b"):
+        ts = summ["tenants"][name]
+        row(f"fleet:tenant:{name}", 0.0,
+            f"p50_ms={pct_f[name][0]:.2f};p99_ms={pct_f[name][1]:.2f}"
+            f";tick_share={ts['tick_share']:.3f}"
+            f";completed={ts.get('completed', 0)}")
+
+    doc = fleet.export_trace(trace_path)
+    n_events = sum(1 for e in doc["traceEvents"] if e.get("ph") != "M")
+    row("fleet:trace_export", 0.0,
+        f"events={n_events};path={trace_path}")

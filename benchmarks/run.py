@@ -29,6 +29,12 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
                          bases/s, acceptance: within 5%) and exports the
                          traced run's trace_flowcell.json (Chrome trace,
                          Perfetto-loadable) + timeseries_flowcell.jsonl
+  bench_fleet            repro.fleet: bursty 2-tenant fleet (basecall +
+                         lm_decode, one mesh) vs each tenant solo on the
+                         same arrival schedule — aggregate reqs/s must be
+                         >= 1.5x the worse solo (idle-slot filling), the
+                         CI fleet-smoke artifact (BENCH_fleet.json +
+                         trace_fleet.json)
 """
 from __future__ import annotations
 
@@ -225,6 +231,11 @@ def bench_flowcell(smoke: bool = False):
     fcb.bench_flowcell(row, smoke=smoke)
 
 
+def bench_fleet(smoke: bool = False):
+    import fleet as flb
+    flb.bench_fleet(row, smoke=smoke)
+
+
 def bench_kernel_dispatch():
     """Compute fabric: each registered op on each target, with the
     dispatch/fallback counters the engine telemetry surfaces."""
@@ -371,6 +382,7 @@ def main() -> None:
         "adaptive": bench_adaptive,
         "quant": bench_quant,
         "flowcell": lambda: bench_flowcell(smoke=args.smoke),
+        "fleet": lambda: bench_fleet(smoke=args.smoke),
     }
     if args.only:
         selected = [n.strip() for n in args.only.split(",")]
@@ -380,9 +392,10 @@ def main() -> None:
                      f"{sorted(benches)}")
     else:
         # adaptive and quant train a micro basecaller, flowcell sweeps up to
-        # 512 channels — all skipped in smoke (run via --only)
+        # 512 channels, fleet sleeps through bursty arrival schedules — all
+        # skipped in smoke (run via --only)
         selected = [n for n in benches
-                    if n not in ("adaptive", "quant", "flowcell")
+                    if n not in ("adaptive", "quant", "flowcell", "fleet")
                     or not args.smoke]
 
     print("name,us_per_call,derived")

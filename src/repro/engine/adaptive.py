@@ -157,6 +157,20 @@ class AdaptiveSamplingEngine:
     def step(self) -> bool:
         return self.runtime.tick()
 
+    def suspend_tick(self) -> None:
+        """Fleet hook: hand the lane mesh to the next tenant with none of
+        our double-buffered dispatches still in flight."""
+        self.runtime.yield_mesh()
+
+    def flush(self) -> None:
+        self.runtime.flush()
+
+    def detach_source(self) -> None:
+        """Live flowcell detach (fleet ``remove_tenant``): stop capturing
+        new molecules; occupied lanes stream to their decisions."""
+        self.runtime.detach_source()
+        self.flowcell = None
+
     def drain(self, max_steps: int = 100_000) -> dict:
         out = self.runtime.run(max_steps)
         out.update(self._energy())

@@ -54,6 +54,17 @@ class EngineBase:
     def step(self) -> bool:  # pragma: no cover - must be overridden
         raise NotImplementedError
 
+    # Fleet time-slicing hooks: the fleet brackets every engine tick with
+    # resume_tick()/suspend_tick() so engines that pipeline device work
+    # across ticks (the depth-2 flowcell runtime) can yield the mesh to the
+    # next tenant with no dispatch left in flight.  No-ops by default —
+    # single-tick engines already leave the mesh clean between steps.
+    def resume_tick(self) -> None:
+        """The fleet is about to run one of this engine's ticks."""
+
+    def suspend_tick(self) -> None:
+        """The fleet is done with this engine's tick; release the mesh."""
+
     def drain(self, max_steps: int = 100_000) -> dict:
         """Step until the scheduler is empty (or ``max_steps``); returns the
         telemetry summary."""

@@ -27,6 +27,19 @@ _BUILDERS: dict[str, Callable[..., Any]] = {}
 _PRESETS: dict[str, dict[str, dict]] = {}
 
 
+class UnknownWorkloadError(ValueError, KeyError):
+    """Unknown workload or preset name.
+
+    Inherits both :class:`ValueError` (the documented contract — the
+    message names the available options) and :class:`KeyError` (what
+    ``build`` historically raised), so existing ``except KeyError``
+    callers keep working.
+    """
+
+    def __str__(self) -> str:        # undo KeyError's repr-quoting
+        return self.args[0] if self.args else ""
+
+
 def register(workload: str, presets: Optional[dict[str, dict]] = None):
     """Decorator: register ``fn`` as the builder for ``workload``.
 
@@ -47,7 +60,7 @@ def _resolve(workload: str) -> Callable[..., Any]:
     if workload not in _BUILDERS and workload in _WORKLOAD_MODULES:
         importlib.import_module(_WORKLOAD_MODULES[workload])
     if workload not in _BUILDERS:
-        raise KeyError(
+        raise UnknownWorkloadError(
             f"unknown workload {workload!r}; available: {sorted(workloads())}")
     return _BUILDERS[workload]
 
@@ -63,19 +76,35 @@ def presets(workload: str) -> dict[str, dict]:
     return {k: dict(v) for k, v in _PRESETS[workload].items()}
 
 
-def build(workload: str, preset: str = "default", **overrides: Any):
+def build(workload: str, preset: str = "default", *, fleet=None,
+          tenant: Optional[str] = None, weight: float = 1.0,
+          priority: int = 0, **overrides: Any):
     """Construct an engine: resolve the workload's builder, start from the
     named preset's keywords, and apply ``overrides`` on top.
 
     Every workload accepts ``fabric=`` (a :class:`repro.kernels.fabric.
     FabricPolicy`, or a target name like ``"pallas_interpret"``) to pin the
     kernel execution targets for the whole engine; default is the ambient
-    compute-fabric policy."""
+    compute-fabric policy.
+
+    Unknown workload/preset names raise :class:`UnknownWorkloadError` (a
+    ``ValueError``) listing the available options.
+
+    ``fleet=`` attaches the built engine to a :class:`repro.fleet.Fleet`
+    as tenant ``tenant`` (default: the workload name) with the given
+    ``weight``/``priority``, returning the :class:`~repro.fleet.Tenant`
+    handle instead of the bare engine — single-engine callers that omit
+    ``fleet`` keep the one-tenant fast path unchanged."""
     builder = _resolve(workload)
     table = _PRESETS[workload]
     if preset not in table:
-        raise KeyError(f"unknown preset {preset!r} for workload "
-                       f"{workload!r}; available: {sorted(table)}")
+        raise UnknownWorkloadError(
+            f"unknown preset {preset!r} for workload "
+            f"{workload!r}; available: {sorted(table)}")
     kwargs = dict(table[preset])
     kwargs.update(overrides)
-    return builder(**kwargs)
+    engine = builder(**kwargs)
+    if fleet is None:
+        return engine
+    return fleet.attach(tenant or workload, engine, workload=workload,
+                        preset=preset, weight=weight, priority=priority)

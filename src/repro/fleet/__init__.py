@@ -1,0 +1,18 @@
+"""repro.fleet — multi-tenant serving: many flowcells, many users, one mesh.
+
+The unit of service is a *request*, not a process: a :class:`Fleet`
+time-slices mesh ticks across tenants (weighted-fair deficit round robin
+with strict priorities, per-tenant quota and backpressure), packs
+compatible ``basecall`` / ``lm_decode`` tenants into shared jitted steps
+(continuous cross-tenant batching), supports live attach/detach without
+draining the mesh, and rolls every engine's telemetry up into per-tenant
+and fleet-wide summaries.  See README "Fleet serving".
+"""
+from repro.fleet.batching import (BasecallUnit, GenericUnit, LMUnit,
+                                  SHAREABLE_WORKLOADS, make_unit)
+from repro.fleet.fleet import Fleet, Tenant
+from repro.fleet.scheduler import FleetScheduler, TenantState
+
+__all__ = ["Fleet", "Tenant", "FleetScheduler", "TenantState",
+           "BasecallUnit", "LMUnit", "GenericUnit", "make_unit",
+           "SHAREABLE_WORKLOADS"]

@@ -11,6 +11,21 @@ Routes through ``repro.engine.build``; pick a workload and a preset:
   PYTHONPATH=src python -m repro.launch.serve --workload pathogen_pipeline \
       --requests 4
 
+Discovery: ``--list-workloads`` prints every buildable workload,
+``--list-presets <workload>`` its preset table (name + keyword bundle) —
+and an unknown ``--workload``/``--preset`` fails with a ``ValueError``
+naming the available options instead of a bare ``KeyError``.
+
+Fleet mode (see :mod:`repro.fleet`): ``--fleet SPEC.json`` serves several
+tenants on one mesh from a spec file::
+
+    {"mesh": "auto",
+     "tenants": [
+       {"name": "lab-a", "workload": "adaptive_sampling",
+        "preset": "flowcell_smoke", "weight": 2},
+       {"name": "lab-b", "workload": "basecall", "preset": "smoke",
+        "requests": 32}]}
+
 Observability flags (see :mod:`repro.obs`):
 
   --trace PATH       export a Chrome trace-event JSON of the run (open at
@@ -66,11 +81,86 @@ _DRIVERS = {
 }
 
 
+def _submit_tenant_work(fleet, tenant, spec, rng) -> None:
+    """Queue one tenant's requests per its workload's input shape (a
+    source-fed flowcell tenant feeds itself and takes none)."""
+    n = int(spec.get("requests", 12))
+    workload = tenant.workload
+    if workload == "adaptive_sampling":
+        eng = tenant.engine
+        if eng.flowcell is not None:
+            return
+        for i in range(n):
+            from repro.realtime import SimulatedRead
+            sig = rng.normal(size=8 * eng.runtime.chunk_samples
+                             ).astype(np.float32)
+            tenant.submit(SimulatedRead(signal=sig, read_id=i,
+                                        on_target=bool(i % 2)))
+    elif workload == "lm_decode":
+        from repro.engine.lm import Request
+        vocab = tenant.engine.cfg.vocab_size
+        for uid in range(n):
+            tenant.submit(Request(uid=uid,
+                                  prompt=rng.integers(1, vocab, 4),
+                                  max_new_tokens=int(
+                                      spec.get("new_tokens", 8))))
+    elif workload == "basecall":
+        chunk = tenant.engine.chunk
+        for _ in range(n):
+            tenant.submit(rng.normal(size=chunk).astype(np.float32))
+    else:
+        for _ in range(n):
+            tenant.submit(rng.normal(size=(8, 512)).astype(np.float32))
+
+
+def _run_fleet(args) -> dict:
+    """``--fleet SPEC.json``: many tenants, one mesh, one drained report."""
+    from repro.fleet import Fleet
+    with open(args.fleet) as f:
+        spec = json.load(f)
+    fleet = Fleet(mesh=spec.get("mesh"), trace=args.trace is not None,
+                  max_pending=int(spec.get("max_pending", 256)))
+    rng = np.random.default_rng(args.seed)
+    tenants = []
+    for t in spec["tenants"]:
+        tenant = fleet.add_tenant(
+            t["name"], t["workload"], t.get("preset", "default"),
+            weight=float(t.get("weight", 1.0)),
+            priority=int(t.get("priority", 0)),
+            max_pending=t.get("max_pending"),
+            **t.get("overrides", {}))
+        tenants.append((tenant, t))
+    for tenant, t in tenants:
+        _submit_tenant_work(fleet, tenant, t, rng)
+    report = fleet.drain()
+    if args.trace is not None:
+        fleet.export_trace(args.trace)
+        print(f"trace -> {args.trace} (open at https://ui.perfetto.dev)")
+    if args.json:
+        print(json.dumps(report, default=float, indent=2))
+    else:
+        fl = report["fleet"]
+        print(f"fleet: {fl['n_tenants']} tenants, {fl['ticks']} ticks, "
+              f"fairness_ratio={fl['fairness_ratio']:.3f}")
+        for name, ts in report["tenants"].items():
+            print(f"  {name:16s} ticks={ts['ticks']:<6d} "
+                  f"share={ts['tick_share']:.3f} "
+                  f"completed={ts.get('completed', 0)} "
+                  f"p99={ts.get('p99_ms', 0.0):.2f}ms")
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--workload", default="lm_decode",
-                    choices=engine_api.workloads())
+    ap.add_argument("--workload", default="lm_decode")
     ap.add_argument("--preset", default="default")
+    ap.add_argument("--list-workloads", action="store_true",
+                    help="print buildable workloads and exit")
+    ap.add_argument("--list-presets", default=None, metavar="WORKLOAD",
+                    help="print a workload's presets and exit")
+    ap.add_argument("--fleet", default=None, metavar="SPEC.json",
+                    help="multi-tenant mode: serve every tenant in the "
+                         "spec file on one mesh (see repro.fleet)")
     ap.add_argument("--requests", type=int, default=12,
                     help="requests / chunks / reads to drive through")
     ap.add_argument("--seed", type=int, default=0)
@@ -94,6 +184,19 @@ def main() -> None:
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="capture a jax.profiler trace around the run")
     args = ap.parse_args()
+
+    if args.list_workloads:
+        for w in engine_api.workloads():
+            print(w)
+        return
+    if args.list_presets is not None:
+        for name, kw in sorted(engine_api.presets(args.list_presets).items()):
+            pretty = ", ".join(f"{k}={v!r}" for k, v in sorted(kw.items()))
+            print(f"{name:16s} {pretty}" if pretty else name)
+        return
+    if args.fleet is not None:
+        _run_fleet(args)
+        return
 
     overrides: dict = {"seed": args.seed}
     if args.arch is not None:

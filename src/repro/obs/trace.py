@@ -89,6 +89,22 @@ class Tracer:
                               "tid": 0, "args": {"name": label}})
         return pid
 
+    def relabel_pid(self, pid: int, label: str) -> None:
+        """Rename an allocated process track (the fleet relabels an
+        engine's track to its tenant once ownership is known).  Duplicate
+        labels are disambiguated like :meth:`pid`; unknown pids no-op."""
+        if not self.enabled or pid not in self._pid_labels:
+            return
+        with self._lock:
+            if any(v == label for p, v in self._pid_labels.items()
+                   if p != pid):
+                label = f"{label}#{pid}"
+            self._pid_labels[pid] = label
+            for ev in self.meta:
+                if ev["name"] == "process_name" and ev["pid"] == pid:
+                    ev["args"] = {"name": label}
+                    return
+
     def tid(self, pid: int, label: str) -> int:
         """Stable thread id for ``label`` within ``pid`` (lane / host /
         slot tracks)."""

@@ -419,6 +419,30 @@ class AdaptiveSamplingRuntime:
         call this; it is also safe to call at any point mid-run."""
         self._process_pending()
 
+    def yield_mesh(self) -> None:
+        """Release the device mesh to another engine between ticks.
+
+        Waits for the dispatched-but-unconsumed tick (depth-2 double
+        buffering keeps one in flight) so no dispatch of ours is pending
+        on the mesh when the fleet hands it to the next tenant.  The
+        logical pipeline is untouched — the synced arrays are still
+        mapped/decided on our *next* tick, so decisions are bit-identical
+        to an undisturbed run; we only give up the dispatch/compute
+        overlap across the yield."""
+        p = self._pending
+        if p is not None:
+            jax.block_until_ready((p["tokens"], p["lens"], p["bases"]))
+            self.telemetry.count("mesh_yields_inflight")
+
+    def detach_source(self) -> None:
+        """Live flowcell detach: stop capturing new molecules, let every
+        in-flight read stream to its decision.  Safe at any tick — the
+        finish path stops reporting pore time to the (gone) simulator and
+        ``tick()`` returns False once the occupied lanes drain."""
+        if self._source is not None:
+            self._source = None
+            self.telemetry.count("source_detached")
+
     def tick(self) -> bool:
         """Advance every busy channel by one chunk; returns False when idle."""
         self.warmup()

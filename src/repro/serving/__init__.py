@@ -1,6 +1,20 @@
-"""Deprecated serving surface — thin shims over :mod:`repro.engine`.
+"""Serving surface: the multi-tenant fleet facade, plus legacy shims.
 
-``LMServer`` / ``BasecallServer`` / ``AdaptiveSamplingServer`` delegate to
-``repro.engine.build("lm_decode" | "basecall" | "adaptive_sampling")``."""
-from repro.serving.engine import (AdaptiveSamplingServer,  # noqa: F401
+New code serves through the fleet (many tenants, one mesh — see
+:mod:`repro.fleet` and README "Fleet serving")::
+
+    from repro.serving import Fleet
+    fleet = Fleet(mesh="auto")
+    fleet.add_tenant("lab-a", "adaptive_sampling", "flowcell_smoke")
+
+or, for the one-tenant fast path, builds an engine directly with
+``repro.engine.build``.  The deprecated servers (``LMServer`` /
+``BasecallServer`` / ``AdaptiveSamplingServer``) live in
+:mod:`repro.serving.legacy` and still delegate to ``repro.engine.build``
+with a :class:`DeprecationWarning`."""
+from repro.fleet import Fleet, FleetScheduler, Tenant  # noqa: F401
+from repro.serving.legacy import (AdaptiveSamplingServer,  # noqa: F401
                                   BasecallServer, LMServer, Request)
+
+__all__ = ["Fleet", "FleetScheduler", "Tenant", "LMServer",
+           "BasecallServer", "AdaptiveSamplingServer", "Request"]

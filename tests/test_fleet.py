@@ -1,0 +1,349 @@
+"""Multi-tenant fleet: facade behavior + the fleet-vs-solo oracle.
+
+The fleet's contract is that multiplexing changes *scheduling*, never
+*results*: a tenant's decisions, outputs and fabric-dispatch accounting
+must be bit-identical to the same engine running alone on the mesh.  The
+oracle tests pin that for the flagship pairing (a source-fed flowcell
+tenant time-sliced against a basecall tenant), plus the serving semantics
+around it: continuous cross-tenant batching with exact demultiplexing,
+bounded-queue backpressure, live attach/detach, and the per-tenant /
+fleet-wide telemetry rollup.
+"""
+import numpy as np
+import pytest
+
+import repro.engine as engine_api
+from repro.data import genome as G
+from repro.fleet import Fleet, SHAREABLE_WORKLOADS
+from repro.realtime import PolicyConfig
+
+SEED = 3
+GENOME_LEN = 6_000
+
+
+def _reference():
+    return G.random_genome(np.random.default_rng(7), GENOME_LEN)
+
+
+_FLOWCELL_KW = dict(
+    channels=4, chunk=64,
+    flowcell={"encoder": "step", "n_reads": 8, "read_len": (64, 128),
+              "recovery_samples": 64, "stagger_samples": 16, "seed": SEED},
+    fabric="reference", pipeline_depth=2)
+
+
+def _flowcell_kw():
+    return dict(_FLOWCELL_KW,
+                reference=_reference(),
+                targets=[(0, GENOME_LEN // 2)],
+                policy=PolicyConfig(min_prefix_bases=24, map_prefix_bases=32,
+                                    max_prefix_bases=96, min_mapq=4.0,
+                                    eject_latency_samples=32))
+
+
+def _golden(engine):
+    recs = sorted(engine.records, key=lambda r: r.read_id)
+    return [(r.read_id, r.decision.value, r.reason, r.bases_at_decision,
+             r.mapped_pos) for r in recs]
+
+
+def _chunks(n, chunk, seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=chunk).astype(np.float32) for _ in range(n)]
+
+
+# ----------------------------------------------------- fleet-vs-solo oracle
+class TestFleetVsSoloOracle:
+    def test_two_tenant_fleet_bit_identical_to_solo_runs(self):
+        """flowcell_smoke-style adaptive tenant + basecall tenant on one
+        fleet: per-tenant decisions/outputs and per-engine fabric counters
+        equal each engine drained alone (PR 6's ScopedCounters attribute
+        dispatches exactly even when engines interleave)."""
+        # --- solo runs ---------------------------------------------------
+        solo_fc = engine_api.build("adaptive_sampling", **_flowcell_kw())
+        solo_fc.drain(max_steps=20_000)
+        golden = _golden(solo_fc)
+        assert len(golden) == 8
+        assert {g[1] for g in golden} >= {"accept", "eject"}
+
+        rows = _chunks(10, 512)
+        solo_bc = engine_api.build("basecall", "smoke", seed=0)
+        for r in rows:
+            solo_bc.submit(r)
+        solo_bc.drain()
+        assert len(solo_bc.reads) == 10
+
+        # --- the same two engines as fleet tenants -----------------------
+        fleet = Fleet()
+        fc = fleet.add_tenant("lab-fc", "adaptive_sampling",
+                              weight=2.0, **_flowcell_kw())
+        bc = fleet.add_tenant("lab-bc", "basecall", "smoke", seed=0)
+        for r in rows:
+            assert bc.submit(r)
+        with pytest.raises(ValueError):
+            fc.submit(np.zeros(64, np.float32))   # source-fed: no intake
+        rep = fleet.drain()
+
+        assert _golden(fc.engine) == golden
+        assert len(bc.outputs) == 10
+        for got, want in zip(bc.outputs, solo_bc.reads):
+            np.testing.assert_array_equal(got, want)
+
+        # exact per-tenant fabric attribution: each fleet engine's scoped
+        # counters equal its solo twin's, despite interleaved execution
+        assert (fc.engine.telemetry.fabric_counters()
+                == solo_fc.telemetry.fabric_counters())
+        assert (bc.engine.telemetry.fabric_counters()
+                == solo_bc.telemetry.fabric_counters())
+        assert fc.telemetry.fabric_counters()     # non-degenerate
+
+        # rollup: fleet totals are the sum of the tenants'
+        assert rep["completed"] == (solo_fc.telemetry.completed
+                                    + solo_bc.telemetry.completed)
+        assert rep["tenants"]["lab-fc"]["reads"] == 8
+        assert rep["tenants"]["lab-bc"]["completed"] == 10
+        assert rep["fleet"]["ticks"] == (fc.state.ticks + bc.state.ticks)
+
+    def test_fleet_wall_is_serial_not_max(self):
+        """Engines time-slice one mesh, so the fleet overrides the merged
+        wall_s with its own measured serial wall (a concurrent-max would
+        overstate every per-second rate)."""
+        fleet = Fleet()
+        t = fleet.add_tenant("t", "basecall", "smoke")
+        for r in _chunks(4, 512):
+            t.submit(r)
+        rep = fleet.drain()
+        assert rep["wall_s"] == pytest.approx(fleet.telemetry.wall_s)
+        assert rep["wall_s"] >= t.engine.telemetry.wall_s
+
+
+# ---------------------------------------------- cross-tenant batching -----
+class TestCrossTenantBatching:
+    def test_compatible_basecall_tenants_share_one_engine(self):
+        fleet = Fleet()
+        a = fleet.add_tenant("a", "basecall", "smoke", weight=3.0)
+        b = fleet.add_tenant("b", "basecall", "smoke")
+        c = fleet.add_tenant("c", "basecall", "smoke", share=False)
+        assert a.unit is b.unit and a.shared and b.shared
+        assert c.unit is not a.unit and not c.shared
+        for r in _chunks(8, 512, seed=1):
+            a.submit(r)
+        for r in _chunks(8, 512, seed=2):
+            b.submit(r)
+        fleet.drain()
+        # exact demultiplexing: every read lands with its owner, in order
+        assert len(a.outputs) == 8 and len(b.outputs) == 8
+        eng = a.unit.engine
+        assert eng.telemetry.completed == 16
+        # shared engine means shared jitted steps: far fewer dispatches
+        # than 16 solo batches of 1 (batch=4 -> 4 full dispatches)
+        assert eng.telemetry.dispatches == 4
+        # per-member telemetry views carry each tenant's own counts
+        assert a.telemetry.completed == 8 and b.telemetry.completed == 8
+        assert a.telemetry is not eng.telemetry
+
+    def test_shared_batch_rows_match_solo_outputs(self):
+        """Idle slots in one tenant's batch carry another tenant's rows,
+        and each row's basecall equals the solo engine's for that row."""
+        rows_a = _chunks(3, 512, seed=5)
+        rows_b = _chunks(3, 512, seed=6)
+        solo = engine_api.build("basecall", "smoke", seed=0)
+        for r in rows_a + rows_b:
+            solo.submit(r)
+        solo.drain()
+
+        fleet = Fleet()
+        a = fleet.add_tenant("a", "basecall", "smoke", seed=0)
+        b = fleet.add_tenant("b", "basecall", "smoke", seed=0)
+        for r in rows_a:
+            a.submit(r)
+        for r in rows_b:
+            b.submit(r)
+        fleet.drain()
+        # interleave (weights equal) packs a0 b0 a1 b1 ... -> same engine,
+        # same per-row results as the solo order for each tenant's rows
+        by_row = {i: r for i, r in enumerate(solo.reads)}
+        np.testing.assert_array_equal(a.outputs[0], by_row[0])
+        np.testing.assert_array_equal(b.outputs[0], by_row[3])
+        assert len(a.outputs) == len(b.outputs) == 3
+
+    def test_lm_tenants_share_slot_pool(self):
+        from repro.engine.lm import Request
+        fleet = Fleet()
+        a = fleet.add_tenant("a", "lm_decode", "smoke")
+        b = fleet.add_tenant("b", "lm_decode", "smoke")
+        assert a.unit is b.unit
+        rng = np.random.default_rng(0)
+        vocab = a.engine.cfg.vocab_size
+        for uid in range(3):
+            a.submit(Request(uid=uid, prompt=rng.integers(1, vocab, 4),
+                             max_new_tokens=4))
+            b.submit(Request(uid=100 + uid, prompt=rng.integers(1, vocab, 4),
+                             max_new_tokens=4))
+        fleet.drain()
+        assert sorted(r.uid for r in a.outputs) == [0, 1, 2]
+        assert sorted(r.uid for r in b.outputs) == [100, 101, 102]
+        assert all(len(r.tokens_out) > 0 for r in a.outputs + b.outputs)
+        assert a.telemetry.tokens > 0 and b.telemetry.tokens > 0
+
+    def test_unshareable_workloads_never_share(self):
+        fleet = Fleet()
+        fleet.add_tenant("x", "adaptive_sampling", "smoke")
+        t = fleet.add_tenant("y", "adaptive_sampling", "smoke")
+        assert not t.shared
+        assert "adaptive_sampling" not in SHAREABLE_WORKLOADS
+
+
+# ------------------------------------------------- quota + backpressure ---
+class TestQuotaBackpressure:
+    def test_bounded_queue_rejects_and_counts(self):
+        fleet = Fleet()
+        t = fleet.add_tenant("t", "basecall", "smoke", max_pending=3)
+        rows = _chunks(5, 512)
+        accepted = [t.submit(r) for r in rows]
+        assert accepted == [True, True, True, False, False]
+        assert t.state.rejected == 2
+        rep = fleet.drain()
+        assert len(t.outputs) == 3
+        ts = rep["tenants"]["t"]
+        assert ts["submitted"] == 3 and ts["rejected"] == 2
+        assert rep["fleet"]["counters"]["tenant.t.rejected"] == 2
+
+    def test_default_quota_comes_from_fleet(self):
+        fleet = Fleet(max_pending=2)
+        t = fleet.add_tenant("t", "basecall", "smoke")
+        got = [t.submit(r) for r in _chunks(3, 512)]
+        assert got == [True, True, False]
+
+    def test_invalid_tenant_params_rejected(self):
+        fleet = Fleet()
+        with pytest.raises(ValueError):
+            fleet.add_tenant("t", "basecall", "smoke", weight=0)
+        with pytest.raises(ValueError):
+            fleet.add_tenant("t", "basecall", "smoke", max_pending=0)
+        fleet.add_tenant("t", "basecall", "smoke")
+        with pytest.raises(ValueError):
+            fleet.add_tenant("t", "basecall", "smoke")
+
+
+# ------------------------------------------------------ attach / detach ---
+class TestLiveAttachDetach:
+    def test_detach_mid_run_keeps_fleet_serving(self):
+        """Remove a flowcell tenant mid-run (drain=True): its occupied
+        lanes stream to decisions, no new molecules are captured, and the
+        other tenant keeps its engine running throughout."""
+        fleet = Fleet()
+        fc = fleet.add_tenant("fc", "adaptive_sampling", **_flowcell_kw())
+        bc = fleet.add_tenant("bc", "basecall", "smoke")
+        for r in _chunks(12, 512):
+            bc.submit(r)
+        for _ in range(4):          # <= 2 flowcell ticks: only the first
+            fleet.step()            # wave of 4 molecules is captured
+        fleet.remove_tenant("fc", drain=True)
+        with pytest.raises(ValueError):
+            fc.submit(np.zeros(64, np.float32))
+        rep = fleet.drain()
+        assert "fc" not in fleet.tenants
+        decided = len(fc.engine.records)
+        assert decided == 4         # wave 1 decided; captures stopped
+        assert fc.engine.telemetry.counters["source_detached"] == 1
+        assert len(bc.outputs) == 12
+        # departed tenant still reported, its totals still in the rollup
+        assert rep["tenants"]["fc"]["reads"] == decided
+        assert rep["completed"] == decided + 12
+
+    def test_detach_now_drops_queue_counted(self):
+        fleet = Fleet()
+        t = fleet.add_tenant("t", "basecall", "smoke")
+        for r in _chunks(6, 512):
+            t.submit(r)
+        fleet.step()                # one batch of 4 dispatched
+        final = fleet.remove_tenant("t", drain=False)
+        assert "t" not in fleet.tenants
+        assert fleet.telemetry.counters["tenant.t.dropped"] == 2
+        assert final["completed"] == 4
+        assert not fleet.step()     # nothing left to serve
+
+    def test_attach_mid_run_and_registry_fleet_path(self):
+        fleet = Fleet()
+        a = fleet.add_tenant("a", "basecall", "smoke")
+        for r in _chunks(2, 512):
+            a.submit(r)
+        fleet.step()
+        # registry attach path: build(..., fleet=) returns a Tenant handle
+        b = engine_api.build("basecall", "smoke", fleet=fleet, tenant="b",
+                            weight=2.0)
+        from repro.fleet import Tenant
+        assert isinstance(b, Tenant) and b.name == "b"
+        for r in _chunks(2, 512):
+            b.submit(r)
+        rep = fleet.drain()
+        assert len(a.outputs) == 2 and len(b.outputs) == 2
+        assert set(rep["tenants"]) == {"a", "b"}
+
+    def test_shared_member_detach_leaves_engine_serving(self):
+        fleet = Fleet()
+        a = fleet.add_tenant("a", "basecall", "smoke")
+        b = fleet.add_tenant("b", "basecall", "smoke")
+        for r in _chunks(4, 512, seed=1):
+            a.submit(r)
+        for r in _chunks(4, 512, seed=2):
+            b.submit(r)
+        fleet.remove_tenant("a", drain=True)
+        rep = fleet.drain()
+        assert len(a.outputs) == 4 and len(b.outputs) == 4
+        assert "a" not in fleet.tenants and "b" in fleet.tenants
+        assert rep["tenants"]["b"]["completed"] == 4
+
+
+# --------------------------------------------------------- observability --
+class TestFleetObservability:
+    def test_per_tenant_trace_tracks(self):
+        from repro.obs.trace import validate_chrome_trace
+        fleet = Fleet(trace=True)
+        a = fleet.add_tenant("lab-a", "basecall", "smoke")
+        b = fleet.add_tenant("lab-b", "basecall", "smoke", share=False)
+        for r in _chunks(3, 512):
+            a.submit(r)
+            b.submit(r)
+        fleet.drain()
+        doc = fleet.tracer.to_chrome()
+        assert validate_chrome_trace(doc) == []
+        names = {e["args"]["name"] for e in doc["traceEvents"]
+                 if e.get("ph") == "M" and e["name"] == "process_name"}
+        assert any("lab-a" in n for n in names)
+        assert any("lab-b" in n for n in names)
+
+    def test_summary_has_fairness_and_shares(self):
+        fleet = Fleet()
+        a = fleet.add_tenant("a", "basecall", "smoke", weight=2.0,
+                             share=False)
+        b = fleet.add_tenant("b", "basecall", "smoke", share=False)
+        for r in _chunks(8, 512):
+            a.submit(r)
+            b.submit(r)
+        rep = fleet.drain()
+        fl = rep["fleet"]
+        assert fl["fairness_ratio"] >= 1.0
+        assert set(fl["tick_shares"]) == {"a", "b"}
+        assert fl["weights"] == {"a": 2.0, "b": 1.0}
+        assert abs(sum(fl["tick_shares"].values()) - 1.0) < 1e-9
+
+
+# ----------------------------------------------------- serving re-export --
+class TestServingSurface:
+    def test_serving_reexports_fleet_and_legacy(self):
+        import repro.serving as serving
+        assert serving.Fleet is Fleet
+        from repro.serving.engine import BasecallServer      # noqa: F401
+        from repro.serving.legacy import LMServer            # noqa: F401
+        assert serving.LMServer is LMServer
+
+    def test_registry_errors_name_options(self):
+        with pytest.raises(ValueError, match="adaptive_sampling"):
+            engine_api.build("nope")
+        with pytest.raises(ValueError, match="smoke"):
+            engine_api.build("basecall", "nope")
+        # historical contract: except KeyError still catches both
+        with pytest.raises(KeyError):
+            engine_api.build("nope")
