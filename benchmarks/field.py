@@ -1,0 +1,88 @@
+"""Field deployment end-to-end: N edge devices -> lossy uplink -> aggregator.
+
+The two headline numbers ISSUE-8 pins (the CI field-smoke artifact,
+``BENCH_field.json`` + ``trace_field.json``):
+
+  * **outbreak-detection latency** — scenario ticks from the first
+    infected-device read frame reaching the channel to the aggregator's
+    presence call on the seeded pathogen (with the decoy genome staying
+    absent);
+  * **bytes-on-wire vs raw signal** — what the devices actually uplinked
+    (2-bit base frames + zlib'd telemetry snapshots) vs the float32
+    signal they sequenced.  Acceptance bar: >= 20x reduction vs the
+    sequenced signal — the no-edge-compute baseline, i.e. what a device
+    without local Read-Until + basecalling would have to stream.  The
+    stricter ratios (vs accepted reads' signal only, and read-frames-only)
+    are reported alongside.
+
+Plus the conservation invariant the property tests pin: unique reads
+ingested == sum of per-device accepted reads, exactly, despite the lossy
+channel's reordering and duplication (both counted by the aggregator).
+
+Smoke mode shrinks to 4 devices / 16 molecules (each device jit-compiles
+its own engine, ~seconds apiece on CPU); the full run is the 8-device
+default :class:`repro.field.FieldSpec`.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _smoke_spec():
+    from repro.field import FieldSpec
+    return FieldSpec(n_devices=4, n_infected=1, host_len=2000,
+                     pathogen_len=1000, n_reads=16, min_reads=2,
+                     min_abundance=0.01, detect_window=192,
+                     max_delay_ticks=2, dup_prob=0.1, seed=3)
+
+
+def bench_field(row, *, smoke: bool = False,
+                trace_path: str = "trace_field.json") -> dict:
+    from repro.field import FieldSpec, run_field_scenario
+
+    spec = _smoke_spec() if smoke else FieldSpec()
+    t0 = time.perf_counter()
+    res = run_field_scenario(spec, trace_path=trace_path)
+    wall = time.perf_counter() - t0
+
+    ob, wire, cons = res["outbreak"], res["wire"], res["conservation"]
+    row("field:e2e", wall * 1e6,
+        f"devices={spec.n_devices};infected={spec.n_infected}"
+        f";ticks={res['ticks']};detected={ob['detected']}"
+        f";latency_ticks={ob['latency_ticks']}"
+        f";decoy_absent={ob['decoy_absent']}")
+    row("field:wire", 0.0,
+        f"bytes_on_wire={wire['bytes_on_wire']}"
+        f";raw_sequenced={wire['raw_signal_bytes_sequenced']}"
+        f";reduction_vs_sequenced={wire['reduction_vs_sequenced']:.1f}"
+        f";bar=20"
+        f";reduction_vs_accepted={wire['reduction_vs_accepted']:.1f}"
+        f";read_path_reduction={wire['read_path_reduction']:.1f}"
+        f";telemetry_bytes={wire['telemetry_frame_bytes']}")
+    row("field:conservation", 0.0,
+        f"accepted_sum={cons['accepted_reads_sum']}"
+        f";ingested_unique={cons['reads_ingested_unique']}"
+        f";per_device_exact={cons['per_device_exact']}"
+        f";dup_detected={cons['dup_frames_detected']}"
+        f";late={cons['late_frames']}")
+    surv = res["surveillance"]
+    row("field:surveillance", 0.0,
+        ";".join(f"count_{k.replace('-', '_')}={v}"
+                 for k, v in surv["counts"].items())
+        + f";reads={surv['reads_ingested']}"
+        f";devices_reporting={surv['devices_reporting']}")
+    var = res["variants"]
+    row("field:variants", 0.0,
+        f"seeded_snps={var['seeded_snps']}"
+        f";candidate_sites={var['candidate_sites']}"
+        f";recovered_snps={var['recovered_snps']}")
+    for dev in res["per_device"]:
+        enr = dev["enrichment"]
+        extra = f";enrichment={enr:.2f}" if enr is not None else ""
+        row(f"field:device:{dev['device_id']}", 0.0,
+            f"infected={dev['infected']}"
+            f";accepted_reads={dev['accepted_reads']}"
+            f";wire_bytes={dev['wire_bytes']}" + extra)
+    row("field:trace_export", 0.0,
+        f"events={res['trace']['events']};path={trace_path}")
+    return res

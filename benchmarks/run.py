@@ -35,6 +35,14 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
                          >= 1.5x the worse solo (idle-slot filling), the
                          CI fleet-smoke artifact (BENCH_fleet.json +
                          trace_fleet.json)
+  bench_field            repro.field: N edge sequencers uplinking
+                         compressed read frames through a lossy channel to
+                         one aggregator — outbreak-detection latency,
+                         bytes-on-wire vs raw signal (bar: >= 20x vs the
+                         sequenced-signal baseline), exact read
+                         conservation under reorder/dup — the CI
+                         field-smoke artifact (BENCH_field.json +
+                         trace_field.json)
 """
 from __future__ import annotations
 
@@ -236,6 +244,11 @@ def bench_fleet(smoke: bool = False):
     flb.bench_fleet(row, smoke=smoke)
 
 
+def bench_field(smoke: bool = False):
+    import field as fdb
+    fdb.bench_field(row, smoke=smoke)
+
+
 def bench_kernel_dispatch():
     """Compute fabric: each registered op on each target, with the
     dispatch/fallback counters the engine telemetry surfaces."""
@@ -383,6 +396,7 @@ def main() -> None:
         "quant": bench_quant,
         "flowcell": lambda: bench_flowcell(smoke=args.smoke),
         "fleet": lambda: bench_fleet(smoke=args.smoke),
+        "field": lambda: bench_field(smoke=args.smoke),
     }
     if args.only:
         selected = [n.strip() for n in args.only.split(",")]
@@ -392,10 +406,12 @@ def main() -> None:
                      f"{sorted(benches)}")
     else:
         # adaptive and quant train a micro basecaller, flowcell sweeps up to
-        # 512 channels, fleet sleeps through bursty arrival schedules — all
-        # skipped in smoke (run via --only)
+        # 512 channels, fleet sleeps through bursty arrival schedules, field
+        # compiles one engine per edge device — all skipped in smoke (run
+        # via --only)
         selected = [n for n in benches
-                    if n not in ("adaptive", "quant", "flowcell", "fleet")
+                    if n not in ("adaptive", "quant", "flowcell", "fleet",
+                                 "field")
                     or not args.smoke]
 
     print("name,us_per_call,derived")

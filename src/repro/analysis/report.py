@@ -14,6 +14,13 @@ per-read decision breakdown) from ``--trace`` / the flowcell benchmark:
 
   PYTHONPATH=src python -m repro.analysis.report --section trace \
       --trace trace_flowcell.json
+
+The field section renders the ``field:*`` rows of the field-deployment
+benchmark (outbreak latency, bytes-on-wire vs raw signal, per-device
+enrichment):
+
+  PYTHONPATH=src python -m repro.analysis.report --section field \
+      --field BENCH_field.json
 """
 from __future__ import annotations
 
@@ -150,6 +157,54 @@ def quant_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def field_tables(rows: list[dict]) -> str:
+    """Field-deployment summary from ``field:*`` benchmark rows: the
+    outbreak headline, the bytes-on-wire table (three baselines), and the
+    per-device enrichment breakdown."""
+    named = {r["name"]: _parse_derived(r["derived"]) for r in rows
+             if r["name"].startswith("field:")}
+    out = []
+    e2e = named.get("field:e2e", {})
+    out.append("**Outbreak**: "
+               f"{e2e.get('devices', '?')} devices "
+               f"({e2e.get('infected', '?')} infected), "
+               f"detected={e2e.get('detected', '—')}, "
+               f"latency={e2e.get('latency_ticks', '—')} ticks, "
+               f"decoy_absent={e2e.get('decoy_absent', '—')}\n")
+    wire = named.get("field:wire", {})
+    out.append("| bytes on wire | raw signal (sequenced) "
+               "| reduction vs sequenced | vs accepted | read path only |")
+    out.append("|---|---|---|---|---|")
+    out.append(f"| {wire.get('bytes_on_wire', '—')} "
+               f"| {wire.get('raw_sequenced', '—')} "
+               f"| {wire.get('reduction_vs_sequenced', '—')}x "
+               f"(bar {wire.get('bar', '20')}x) "
+               f"| {wire.get('reduction_vs_accepted', '—')}x "
+               f"| {wire.get('read_path_reduction', '—')}x |")
+    cons = named.get("field:conservation", {})
+    out.append(f"\n**Conservation**: accepted={cons.get('accepted_sum', '—')}"
+               f", unique ingested={cons.get('ingested_unique', '—')} "
+               f"(exact={cons.get('per_device_exact', '—')}), "
+               f"dup dropped={cons.get('dup_detected', '—')}, "
+               f"late={cons.get('late', '—')}\n")
+    out.append("| device | infected | accepted reads | wire bytes "
+               "| enrichment |")
+    out.append("|---|---|---|---|---|")
+    for name in sorted(n for n in named if n.startswith("field:device:")):
+        d = named[name]
+        out.append(f"| {name.rsplit(':', 1)[1]} "
+                   f"| {d.get('infected', '—')} "
+                   f"| {d.get('accepted_reads', '—')} "
+                   f"| {d.get('wire_bytes', '—')} "
+                   f"| {d.get('enrichment', '—')} |")
+    var = named.get("field:variants", {})
+    if var:
+        out.append(f"\n**Variants**: {var.get('seeded_snps', '—')} SNPs "
+                   f"seeded, {var.get('candidate_sites', '—')} candidate "
+                   f"sites, {var.get('recovered_snps', '—')} recovered")
+    return "\n".join(out)
+
+
 def trace_tables(doc: dict) -> str:
     """Span/event statistics from an exported Chrome trace document: one
     row per (process, event name) with counts and X-span duration stats,
@@ -205,10 +260,23 @@ def main() -> None:
     ap.add_argument("--trace", default="trace_flowcell.json",
                     help="Chrome trace JSON (serve --trace / the flowcell "
                          "benchmark's traced run)")
+    ap.add_argument("--field", default="BENCH_field.json",
+                    help="rows from benchmarks/run.py --only field --json")
     ap.add_argument("--section", default="all",
                     choices=["all", "dryrun", "roofline", "fractions",
-                             "quant", "trace"])
+                             "quant", "trace", "field"])
     args = ap.parse_args()
+    if args.section == "field":
+        try:
+            with open(args.field) as f:
+                rows = json.load(f)
+        except FileNotFoundError:
+            raise SystemExit(
+                f"{args.field} not found — generate it first with "
+                "`benchmarks/run.py --only field --json BENCH_field.json`")
+        print("### Field deployment — outbreak latency & bytes on wire\n")
+        print(field_tables(rows))
+        return
     if args.section == "trace":
         try:
             with open(args.trace) as f:

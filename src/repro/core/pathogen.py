@@ -100,11 +100,26 @@ class DetectionReport:
 
 def detect(panel: Panel, reads: np.ndarray,
            cfg: DetectConfig = DetectConfig(), *, mode: str = "ed",
+           read_lens: np.ndarray | None = None,
            interpret=fabric_mod.UNSET, fabric=None) -> DetectionReport:
-    """Classify reads against the panel and call presence per pathogen."""
+    """Classify reads against the panel and call presence per pathogen.
+
+    ``read_lens`` (optional, per read) marks each read's true length: the
+    padded tail is replaced by a sentinel token that matches nothing (the
+    zero padding of the last genome window would otherwise "match" zero-
+    padded reads), and each read's score threshold comes from its true
+    length instead of the padded array width — the field-uplink case,
+    where accepted Read-Until prefixes of different lengths share one
+    fixed-width batch.
+    """
     fabric = fabric_mod.legacy_policy("pathogen.detect", interpret=interpret,
                                       fabric=fabric)
     r, l = reads.shape
+    if read_lens is not None:
+        lens_arr = np.asarray(read_lens, np.int64)
+        offs = np.arange(l)[None, :]
+        reads = np.where(offs < lens_arr[:, None], reads, -1).astype(
+            np.asarray(reads).dtype)
     all_scores = np.zeros((len(panel.genomes), r), np.int64)
     for gi, genome in enumerate(panel.genomes):
         if mode == "ed":
@@ -124,7 +139,9 @@ def detect(panel: Panel, reads: np.ndarray,
 
     best = all_scores.argmax(axis=0)
     best_score = all_scores[best, np.arange(r)]
-    threshold = cfg.min_read_frac * cfg.match * l
+    lens = (np.full(r, l) if read_lens is None
+            else np.asarray(read_lens, np.int64))
+    threshold = cfg.min_read_frac * cfg.match * lens
     assign = np.where(best_score >= threshold, best, -1)
 
     counts = {}
@@ -139,3 +156,60 @@ def detect(panel: Panel, reads: np.ndarray,
     return DetectionReport(counts=counts, abundance=abundance,
                            present=present, read_assignment=assign,
                            read_scores=best_score)
+
+
+class IncrementalDetector:
+    """Presence calling over a growing read set, one batch at a time.
+
+    Read classification in :func:`detect` is per-read — a read's panel
+    assignment depends only on its own scores — so the surveillance
+    aggregate (counts, abundance, presence) over N reads decomposes exactly
+    into per-batch classification plus running totals.  ``ingest`` scores
+    only the new batch; :meth:`report` is identical to ``detect`` over the
+    concatenation of every batch seen, for any batch split or arrival
+    order.  This is the field aggregator's per-tick path: O(batch) work per
+    uplink flush instead of O(total reads)."""
+
+    def __init__(self, panel: Panel, cfg: DetectConfig = DetectConfig(), *,
+                 mode: str = "ed", fabric=None):
+        self.panel = panel
+        self.cfg = cfg
+        self.mode = mode
+        self.fabric = fabric
+        self.counts: dict[str, int] = {n: 0 for n in panel.names}
+        self.total_reads = 0
+        self._assign: list[np.ndarray] = []
+        self._scores: list[np.ndarray] = []
+
+    def ingest(self, reads: np.ndarray,
+               read_lens: np.ndarray | None = None) -> DetectionReport:
+        """Classify one (R, L) batch and fold it into the running totals;
+        returns the cumulative report."""
+        reads = np.atleast_2d(np.asarray(reads))
+        if reads.shape[0]:
+            rep = detect(self.panel, reads, self.cfg, mode=self.mode,
+                         read_lens=read_lens, fabric=self.fabric)
+            for name in self.panel.names:
+                self.counts[name] += rep.counts[name]
+            self.total_reads += reads.shape[0]
+            self._assign.append(rep.read_assignment)
+            self._scores.append(rep.read_scores)
+        return self.report()
+
+    def report(self) -> DetectionReport:
+        """Cumulative surveillance state — equal to ``detect`` over every
+        read ingested so far."""
+        abundance = {}
+        present = {}
+        for name in self.panel.names:
+            c = self.counts[name]
+            abundance[name] = c / max(self.total_reads, 1)
+            present[name] = (c >= self.cfg.min_reads
+                             and abundance[name] >= self.cfg.min_abundance)
+        cat = (np.concatenate(self._assign) if self._assign
+               else np.zeros(0, np.int64))
+        sc = (np.concatenate(self._scores) if self._scores
+              else np.zeros(0, np.int64))
+        return DetectionReport(counts=dict(self.counts), abundance=abundance,
+                               present=present, read_assignment=cat,
+                               read_scores=sc)

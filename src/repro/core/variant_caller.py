@@ -38,9 +38,56 @@ class CallerConfig:
     dtype: Any = jnp.float32
 
 
+def base_counts(genome_len: int, reads: np.ndarray, positions: np.ndarray,
+                lengths: np.ndarray | None = None) -> np.ndarray:
+    """(G, 4) per-position base counts from aligned reads — one flattened
+    ``np.add.at`` scatter over every (read, offset) pair instead of a Python
+    loop over reads, so the field aggregator can afford to call it on every
+    ingest batch.  ``positions < 0`` marks unaligned reads (skipped);
+    ``lengths`` (optional, per read) masks padding columns of ragged
+    batches."""
+    counts = np.zeros((genome_len, 4), np.float32)
+    reads = np.asarray(reads)
+    if reads.size == 0:
+        return counts
+    pos = np.asarray(positions, np.int64)
+    valid = pos >= 0
+    if not valid.any():
+        return counts
+    offs = np.arange(reads.shape[1], dtype=np.int64)[None, :]
+    gi = pos[valid][:, None] + offs                    # (R', L) genome index
+    keep = gi < genome_len
+    if lengths is not None:
+        keep &= offs < np.asarray(lengths, np.int64)[valid][:, None]
+    # column index mirrors the oracle's ``reads - 1`` fancy index, where a
+    # stray 0 token wraps to column 3 the way numpy's -1 does
+    col = (np.asarray(reads[valid], np.int64) - 1) % 4
+    np.add.at(counts.reshape(-1), gi[keep] * 4 + col[keep], 1.0)
+    return counts
+
+
+def counts_to_features(genome: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """(G, 4) base counts -> the (G, 9) pileup feature tensor."""
+    g = len(genome)
+    cov = counts.sum(axis=1)
+    feat = np.zeros((g, N_FEATURES), np.float32)
+    feat[:, :4] = counts / np.maximum(cov, 1.0)[:, None]
+    feat[:, 4] = np.log1p(cov) / 5.0
+    feat[np.arange(g), 4 + genome_clip(genome)] = 1.0
+    return feat
+
+
 def build_pileup(genome: np.ndarray, reads: np.ndarray,
                  positions: np.ndarray) -> np.ndarray:
     """(G, 9) pileup tensor from aligned reads (host-side aggregation)."""
+    return counts_to_features(
+        genome, base_counts(len(genome), reads, positions))
+
+
+def build_pileup_loop(genome: np.ndarray, reads: np.ndarray,
+                      positions: np.ndarray) -> np.ndarray:
+    """Reference O(reads) loop implementation — the oracle
+    :func:`build_pileup`'s vectorized scatter is tested against."""
     g = len(genome)
     counts = np.zeros((g, 4), np.float32)
     r, l = reads.shape
@@ -50,14 +97,48 @@ def build_pileup(genome: np.ndarray, reads: np.ndarray,
             continue
         end = min(p + l, g)
         span = end - p
-        idx = genome_idx = np.arange(p, end)
+        idx = np.arange(p, end)
         np.add.at(counts, (idx, reads[i, :span] - 1), 1.0)
-    cov = counts.sum(axis=1)
-    feat = np.zeros((g, N_FEATURES), np.float32)
-    feat[:, :4] = counts / np.maximum(cov, 1.0)[:, None]
-    feat[:, 4] = np.log1p(cov) / 5.0
-    feat[np.arange(g), 4 + genome_clip(genome)] = 1.0
-    return feat
+    return counts_to_features(genome, counts)
+
+
+class PileupState:
+    """Incremental pileup over a growing read set.
+
+    The field aggregator receives reads a batch at a time; rebuilding the
+    pileup from every read seen so far would be O(total reads) per ingest.
+    Base counts are a sum of independent per-read scatters, so this keeps
+    the running (G, 4) count tensor and folds each batch in with one
+    vectorized scatter — ``features()`` then matches :func:`build_pileup`
+    over the concatenated read set exactly, for any batch split or arrival
+    order."""
+
+    def __init__(self, genome: np.ndarray):
+        self.genome = np.asarray(genome)
+        self.counts = np.zeros((len(self.genome), 4), np.float32)
+        self.n_reads = 0
+
+    def ingest(self, reads, positions) -> "PileupState":
+        """Fold a batch in.  ``reads`` is an (R, L) array or a list of
+        variable-length 1-D base arrays (padded internally)."""
+        if isinstance(reads, (list, tuple)):
+            lengths = np.array([len(r) for r in reads], np.int64)
+            width = int(lengths.max()) if len(reads) else 0
+            padded = np.zeros((len(reads), width), np.int64)
+            for i, r in enumerate(reads):
+                padded[i, :len(r)] = np.asarray(r, np.int64)
+            reads = padded
+        else:
+            reads = np.atleast_2d(np.asarray(reads))
+            lengths = None
+        self.counts += base_counts(len(self.genome), reads,
+                                   np.atleast_1d(positions), lengths)
+        self.n_reads += len(reads)
+        return self
+
+    def features(self) -> np.ndarray:
+        """Render the (G, 9) pileup tensor for the reads ingested so far."""
+        return counts_to_features(self.genome, self.counts)
 
 
 def genome_clip(genome: np.ndarray) -> np.ndarray:

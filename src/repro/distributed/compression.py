@@ -1,23 +1,34 @@
-"""Gradient compression for cross-pod links.
+"""Lossy array codecs for bandwidth-constrained links — gradients and
+field-uplink frames.
 
-The 2-pod mesh pays for every gradient all-reduce twice: once over ICI
-(within-pod, ~50 GB/s/link) and once over the slower pod interconnect.  Two
-standard compressors with error feedback:
+Two links in this repo are too narrow for raw float32 and share one codec:
 
-  * ``int8`` — per-leaf symmetric quantization: g ~ s * q, q in int8.
-    4x wire reduction; unbiased to first order; residual carried forward.
-  * ``topk`` — magnitude top-k with error feedback (k as a fraction);
-    transmitted as (values, indices).
+  * **cross-pod gradient all-reduce** — the 2-pod mesh pays for every
+    gradient twice, once over ICI (~50 GB/s/link) and once over the slower
+    pod interconnect; :func:`apply_compression` round-trips grads through
+    the codec with error feedback so only compressed bits cross pods.
+  * **device -> aggregator uplink** (:mod:`repro.field`) — edge sequencers
+    in the field push accepted reads over mobile links; the uplink frame
+    codec (:mod:`repro.field.uplink`) reuses the same compress/decompress
+    pairs for signal payloads, plus 2-bit base packing of its own.
 
-Both expose compress/decompress pairs shaped so the *compressed* tensor is
-what crosses the "pod" mesh axis (the trainer applies them around the pod
-all-reduce); tests check convergence parity within tolerance on a quadratic
-and on the basecaller.
+The shared primitives, generic over any array:
 
-The int8 numerics are NOT defined here: this module is a thin consumer of
-the shared :mod:`repro.quant` helpers (one scale/clip/round in the repo —
-the same symmetric scheme the fabric's MAC path and the quantized
-basecaller use).
+  * ``int8`` — :func:`compress_int8` / :func:`decompress_int8`: per-array
+    symmetric quantization x ~ s * q, q in int8.  4x wire reduction;
+    unbiased to first order.
+  * ``topk`` — :func:`compress_topk` / :func:`decompress_topk`: magnitude
+    top-k (k as a fraction), transmitted as (values, indices).
+
+The gradient-specific API (:class:`CompressionConfig`,
+:func:`apply_compression`, :func:`wire_bytes`, residual/error feedback)
+remains a thin wrapper over those pairs: it owns *policy* (which leaf gets
+which codec, how residuals carry forward), never numerics.
+
+The int8 numerics are NOT defined here either: this module is a thin
+consumer of the shared :mod:`repro.quant` helpers (one scale/clip/round in
+the repo — the same symmetric scheme the fabric's MAC path, the quantized
+basecaller, and the field uplink use).
 """
 from __future__ import annotations
 

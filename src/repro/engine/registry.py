@@ -21,6 +21,7 @@ _WORKLOAD_MODULES: dict[str, str] = {
     "basecall": "repro.engine.basecall",
     "adaptive_sampling": "repro.engine.adaptive",
     "pathogen_pipeline": "repro.engine.pipeline",
+    "field_aggregator": "repro.field.aggregator",
 }
 
 _BUILDERS: dict[str, Callable[..., Any]] = {}

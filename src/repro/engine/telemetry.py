@@ -199,6 +199,43 @@ class Telemetry:
                 out[f"{prefix}.{k}" if k in out else k] = v
         return out
 
+    # ------------------------------------------------------ wire format --
+    _SCALARS = ("wall_s", "steps", "dispatches", "completed", "bases",
+                "samples", "samples_saved", "tokens")
+
+    def to_dict(self) -> dict:
+        """JSON-safe snapshot of the full mergeable state: scalars, latency
+        histogram (exact values or folded buckets), counters, per-stage
+        walls, gauges (with write-sequence numbers), and fabric-dispatch
+        counts.  ``Telemetry.from_dict(json.loads(json.dumps(t.to_dict())))``
+        restores a telemetry whose :meth:`merge` behaviour is identical to
+        the original — the uplink contract for fleet rollups that cross a
+        process/wire boundary."""
+        return {
+            "workload": self.workload,
+            **{f: getattr(self, f) for f in self._SCALARS},
+            "latency_hist": self.latency_hist.to_dict(),
+            "counters": dict(self.counters),
+            "stage_s": dict(self.stage_s),
+            "gauges": self.gauges.to_dict(),
+            "fabric": {k: int(v) for k, v in self.fabric_counters().items()},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Telemetry":
+        """Inverse of :meth:`to_dict` (tracer/exporter hooks are process-
+        local and intentionally not restored)."""
+        out = cls(workload=d.get("workload", ""))
+        for f in cls._SCALARS:
+            setattr(out, f, d[f])
+        out.latency_hist = LogHistogram.from_dict(d["latency_hist"])
+        out.counters = Counters(d["counters"])
+        out.stage_s = dict(d["stage_s"])
+        out.gauges = Gauges.from_dict(d["gauges"])
+        for k, v in d.get("fabric", {}).items():
+            out.fabric_scope.counts[k] += v
+        return out
+
     # ------------------------------------------------------------ merge --
     def merge(self, other: "Telemetry") -> "Telemetry":
         """Fold ``other`` into ``self`` (in place; returns self) — the

@@ -1,0 +1,37 @@
+"""repro.field — fleet-scale field deployment.
+
+The paper's endgame scenario: N mobile-SoC sequencers at the edge, each
+running int8 Read-Until locally, uplinking only their accepted reads as
+compressed frames to one aggregator that does the fleet-level genomics —
+pathogen surveillance and variant calling — incrementally as evidence
+accumulates.
+
+Layers (device -> uplink -> aggregator):
+
+  :mod:`repro.field.device`      :class:`EdgeDevice` — flowcell-fed
+                                 ``edge_int8`` adaptive-sampling engine
+                                 emitting uplink frames
+  :mod:`repro.field.uplink`      the frame codec (2-bit bases, shared
+                                 int8/top-k signal codecs, telemetry JSON)
+  :mod:`repro.field.aggregator`  :class:`AggregatorEngine` — Fleet-hostable
+                                 ingest with dedup/reorder tolerance,
+                                 incremental detect + pileup, telemetry
+                                 rollups
+  :mod:`repro.field.scenario`    :class:`FieldSpec`, :class:`LossyChannel`,
+                                 :func:`run_field_scenario` — the
+                                 end-to-end outbreak drill
+"""
+from repro.field.aggregator import AggregatorEngine
+from repro.field.device import EdgeDevice, calibrated_step_params
+from repro.field.scenario import (FieldSpec, LossyChannel, build_field,
+                                  run_field_scenario)
+from repro.field.uplink import (DecodedRead, UplinkFrame, decode_read,
+                                decode_telemetry, pack_bases, read_frame,
+                                telemetry_frame, unpack_bases)
+
+__all__ = [
+    "AggregatorEngine", "EdgeDevice", "calibrated_step_params",
+    "FieldSpec", "LossyChannel", "build_field", "run_field_scenario",
+    "DecodedRead", "UplinkFrame", "decode_read", "decode_telemetry",
+    "pack_bases", "read_frame", "telemetry_frame", "unpack_bases",
+]

@@ -26,6 +26,13 @@ tenants on one mesh from a spec file::
        {"name": "lab-b", "workload": "basecall", "preset": "smoke",
         "requests": 32}]}
 
+Field mode (see :mod:`repro.field`): ``--field SPEC.json`` runs the
+end-to-end field deployment — N edge sequencers uplinking compressed
+read frames through a lossy channel to one Fleet-hosted aggregator —
+where the spec file holds :class:`repro.field.FieldSpec` fields::
+
+    {"n_devices": 8, "n_infected": 2, "n_reads": 32, "seed": 0}
+
 Observability flags (see :mod:`repro.obs`):
 
   --trace PATH       export a Chrome trace-event JSON of the run (open at
@@ -150,6 +157,36 @@ def _run_fleet(args) -> dict:
     return report
 
 
+def _run_field(args) -> dict:
+    """``--field SPEC.json``: the end-to-end field surveillance drill."""
+    from repro.field import FieldSpec, run_field_scenario
+    with open(args.field) as f:
+        spec = FieldSpec(**json.load(f))
+    res = run_field_scenario(spec, trace_path=args.trace)
+    if args.json:
+        print(json.dumps(res, default=float, indent=2))
+    else:
+        ob, wire, cons = res["outbreak"], res["wire"], res["conservation"]
+        print(f"field: {spec.n_devices} devices ({spec.n_infected} "
+              f"infected), {res['ticks']} ticks")
+        print(f"  outbreak   detected={ob['detected']} "
+              f"latency_ticks={ob['latency_ticks']} "
+              f"decoy_absent={ob['decoy_absent']}")
+        print(f"  wire       {wire['bytes_on_wire']} B vs "
+              f"{wire['raw_signal_bytes_sequenced']} B raw signal "
+              f"({wire['reduction_vs_sequenced']:.1f}x; read path "
+              f"{wire['read_path_reduction']:.1f}x)")
+        print(f"  conserved  exact={cons['per_device_exact']} "
+              f"reads={cons['reads_ingested_unique']}"
+              f"/{cons['accepted_reads_sum']} "
+              f"dup={cons['dup_frames_detected']} "
+              f"late={cons['late_frames']}")
+        if args.trace:
+            print(f"trace -> {args.trace} "
+                  f"(open at https://ui.perfetto.dev)")
+    return res
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workload", default="lm_decode")
@@ -161,6 +198,9 @@ def main() -> None:
     ap.add_argument("--fleet", default=None, metavar="SPEC.json",
                     help="multi-tenant mode: serve every tenant in the "
                          "spec file on one mesh (see repro.fleet)")
+    ap.add_argument("--field", default=None, metavar="SPEC.json",
+                    help="field mode: run the N-device edge deployment "
+                         "described by the FieldSpec JSON (see repro.field)")
     ap.add_argument("--requests", type=int, default=12,
                     help="requests / chunks / reads to drive through")
     ap.add_argument("--seed", type=int, default=0)
@@ -196,6 +236,9 @@ def main() -> None:
         return
     if args.fleet is not None:
         _run_fleet(args)
+        return
+    if args.field is not None:
+        _run_field(args)
         return
 
     overrides: dict = {"seed": args.seed}

@@ -190,6 +190,49 @@ class LogHistogram:
         out.merge(self)
         return out
 
+    # ------------------------------------------------------- wire format --
+    def to_dict(self) -> dict:
+        """JSON-safe snapshot of the full histogram state (both exact and
+        folded modes).  ``vmin``/``vmax`` are ±inf before the first
+        observation — not representable in JSON — so an empty histogram
+        serializes them as ``None``."""
+        return {
+            "lo": self.lo,
+            "growth": self.growth,
+            "exact_until": self.exact_until,
+            "n_buckets": self.n_buckets,
+            "counts": None if self.counts is None
+            else [float(c) for c in self.counts],
+            "values": [float(v) for v in self.values],
+            "weights": [float(w) for w in self.weights],
+            "n": self.n,
+            "wsum": self.wsum,
+            "vwsum": self.vwsum,
+            "vmin": None if self.vmin == math.inf else self.vmin,
+            "vmax": None if self.vmax == -math.inf else self.vmax,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LogHistogram":
+        """Inverse of :meth:`to_dict` — bit-exact state restore, so
+        round-trip-then-merge equals merge-then-round-trip."""
+        out = cls.__new__(cls)
+        out.lo = float(d["lo"])
+        out.growth = float(d["growth"])
+        out.exact_until = int(d["exact_until"])
+        out._log_growth = math.log(out.growth)
+        out.n_buckets = int(d["n_buckets"])
+        out.counts = (None if d["counts"] is None
+                      else np.asarray(d["counts"], np.float64))
+        out.values = [float(v) for v in d["values"]]
+        out.weights = [float(w) for w in d["weights"]]
+        out.n = int(d["n"])
+        out.wsum = float(d["wsum"])
+        out.vwsum = float(d["vwsum"])
+        out.vmin = math.inf if d["vmin"] is None else float(d["vmin"])
+        out.vmax = -math.inf if d["vmax"] is None else float(d["vmax"])
+        return out
+
     def __repr__(self) -> str:
         mode = f"folded[{self.n_buckets + 2}]" if self.folded else "exact"
         return (f"LogHistogram(n={self.n}, wsum={self.wsum:.1f}, "
@@ -240,3 +283,17 @@ class Gauges(dict):
                 super().__setitem__(k, v)
                 self._seq[k] = other_seq.get(k, next(_GAUGE_SEQ))
         return self
+
+    def to_dict(self) -> dict:
+        """JSON-safe snapshot preserving per-key write sequence numbers, so
+        freshest-wins merge semantics survive a wire boundary."""
+        return {"values": dict(self), "seq": dict(self._seq)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Gauges":
+        out = cls()
+        seq = d.get("seq", {})
+        for k, v in d["values"].items():
+            dict.__setitem__(out, k, v)
+            out._seq[k] = int(seq.get(k, 0))
+        return out

@@ -315,7 +315,8 @@ class AdaptiveSamplingRuntime:
             samples_at_decision=s.offset, samples_sequenced=consumed,
             total_samples=total, on_target=s.read.on_target,
             mapped_pos=int(mapped_pos),
-            decision_ms=(now - s.started_wall) * 1e3)
+            decision_ms=(now - s.started_wall) * 1e3,
+            bases=s.bases)
         self.records.append(rec)
         if self._trace.enabled:
             self._trace.end(

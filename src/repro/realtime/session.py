@@ -62,6 +62,9 @@ class ReadRecord:
     on_target: bool | None
     mapped_pos: int
     decision_ms: float              # wall-clock time from read start
+    bases: np.ndarray | None = None  # tokens called by decision time
+    #   (the uplink payload for accepted reads; None when the runtime was
+    #   built without base retention — metrics above never depend on it)
 
     @property
     def samples_saved(self) -> int:

@@ -1,0 +1,457 @@
+"""repro.field: uplink codec, aggregator invariants, end-to-end scenario.
+
+Pinned properties (the ISSUE-8 field contract):
+
+  * **codec round-trips** — 2-bit base packing, read frames, int8 signal
+    snippets, and zlib'd telemetry snapshots all survive the wire exactly
+    (bases/metadata bit-exact; signal within its int8 quantization step);
+  * **telemetry serialization** — ``Telemetry.to_dict``/``from_dict`` is a
+    JSON round-trip, and round-trip-then-merge equals merge-then-round-
+    trip (the fleet-rollup path: device snapshots cross the uplink before
+    merging);
+  * **pileup** — the vectorized scatter equals the kept loop oracle, and
+    incremental ``PileupState`` ingestion equals one-shot construction for
+    any batch split (including ragged reads);
+  * **aggregator invariance** — for a fixed set of unique frames, frame
+    reordering, duplication, and regrouping into different step batches
+    never change presence calls, per-pathogen counts, unique-read
+    accounting, or pileup counts; duplicates are counted, dropout reduces
+    to the delivered subset's baseline;
+  * **end to end** — a multi-device scenario detects the seeded outbreak
+    (decoy stays silent), conserves reads exactly under the lossy channel,
+    and beats the 20x bytes-on-wire bar.
+
+Property checkers run two ways — hypothesis when installed, plus a seeded
+fallback sweep — via the optional-hypothesis shim, like the fleet suite.
+"""
+import dataclasses
+import json
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np
+import pytest
+
+from optional_hypothesis import given, settings, st
+from repro.core import pathogen
+from repro.core import variant_caller as vc
+from repro.engine.telemetry import Telemetry
+from repro.field import uplink
+from repro.field.aggregator import AggregatorEngine
+
+
+@dataclasses.dataclass
+class FakeRecord:
+    """Just the ReadRecord fields the uplink codec reads."""
+    read_id: int
+    bases: np.ndarray
+    mapped_pos: int = -1
+    samples_at_decision: int = 256
+    samples_sequenced: int = 256
+    total_samples: int = 512
+
+
+# ---------------------------------------------------------------- codec ---
+class TestUplinkCodec:
+    def test_pack_unpack_bases_roundtrip(self):
+        rng = np.random.default_rng(0)
+        for n in [0, 1, 2, 3, 4, 5, 7, 8, 33, 128]:
+            tokens = rng.integers(1, 5, n).astype(np.int32)
+            buf = uplink.pack_bases(tokens)
+            assert len(buf) == (n + 3) // 4
+            np.testing.assert_array_equal(
+                uplink.unpack_bases(buf, n), tokens)
+
+    def test_read_frame_roundtrip(self):
+        rng = np.random.default_rng(1)
+        rec = FakeRecord(read_id=7, bases=rng.integers(1, 5, 97),
+                         mapped_pos=1234, samples_at_decision=300,
+                         samples_sequenced=388, total_samples=512)
+        frame = uplink.read_frame(3, 42, rec)
+        assert frame.wire_bytes == len(frame.to_bytes())
+        back = uplink.UplinkFrame.from_bytes(frame.to_bytes())
+        assert back == frame
+        dec = uplink.decode_read(back)
+        assert (dec.device_id, dec.read_id) == (3, 7)
+        assert dec.mapped_pos == 1234
+        assert dec.samples_at_decision == 300
+        assert dec.samples_sequenced == 388
+        assert dec.total_samples == 512
+        np.testing.assert_array_equal(dec.bases, rec.bases)
+        assert dec.signal is None
+
+    def test_signal_snippet_roundtrip(self):
+        rng = np.random.default_rng(2)
+        rec = FakeRecord(read_id=0, bases=rng.integers(1, 5, 40))
+        sig = rng.normal(size=512).astype(np.float32) * 3.0
+        frame = uplink.read_frame(0, 0, rec, signal=sig, signal_snippet=64)
+        dec = uplink.decode_read(frame)
+        assert dec.signal is not None and dec.signal.shape == (64,)
+        scale = np.abs(sig[:64]).max() / 127.0
+        assert np.abs(dec.signal - sig[:64]).max() <= scale + 1e-6
+
+    def test_bad_frames_raise(self):
+        rec = FakeRecord(read_id=0, bases=np.array([1, 2, 3]))
+        good = uplink.read_frame(0, 0, rec).to_bytes()
+        with pytest.raises(ValueError):
+            uplink.UplinkFrame.from_bytes(b"\x00\x00" + good[2:])  # magic
+        with pytest.raises(ValueError):
+            uplink.UplinkFrame.from_bytes(good[:-1])               # trunc
+        tel = uplink.telemetry_frame(0, 1, Telemetry(workload="x"))
+        with pytest.raises(ValueError):
+            uplink.decode_read(tel)                                # kind
+
+    def test_wire_density_beats_raw_signal(self):
+        """One 128-base read frame vs its raw float32 signal: >= 20x."""
+        rec = FakeRecord(read_id=0,
+                         bases=np.random.default_rng(3).integers(1, 5, 128),
+                         samples_sequenced=512)
+        frame = uplink.read_frame(0, 0, rec)
+        raw = uplink.raw_signal_bytes(rec.samples_sequenced)
+        assert raw / frame.wire_bytes >= 20
+
+
+# ---------------------------------------------------- telemetry on wire ---
+def _populated_telemetry(seed: int) -> Telemetry:
+    rng = np.random.default_rng(seed)
+    t = Telemetry(workload=f"w{seed % 3}")
+    t.steps = int(rng.integers(1, 50))
+    t.completed = int(rng.integers(0, 40))
+    t.bases = int(rng.integers(0, 5000))
+    t.samples = int(rng.integers(0, 9000))
+    t.samples_saved = int(rng.integers(0, 2000))
+    t.wall_s = float(rng.uniform(0, 5))
+    for ms in rng.uniform(0.1, 50, size=rng.integers(1, 30)):
+        t.observe_latency(float(ms))
+    for i in range(int(rng.integers(1, 5))):
+        t.count(f"c{i}", int(rng.integers(1, 9)))
+        t.gauge(f"g{i}", float(rng.uniform(0, 1)))
+    t.stage_s[f"stage{seed % 2}"] = float(rng.uniform(0, 1))
+    t.fabric_scope.counts[f"fabric.dispatch.op{seed % 2}"] = int(
+        rng.integers(1, 7))
+    return t
+
+
+def _roundtrip(t: Telemetry) -> Telemetry:
+    return Telemetry.from_dict(json.loads(json.dumps(t.to_dict())))
+
+
+class TestTelemetrySerialization:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_json_roundtrip_preserves_summary(self, seed):
+        t = _populated_telemetry(seed)
+        back = _roundtrip(t)
+        assert back.summary() == t.summary()
+        assert dict(back.counters) == dict(t.counters)
+        assert dict(back.gauges) == dict(t.gauges)
+        assert back.latency_hist.percentile(99) == \
+            t.latency_hist.percentile(99)
+        assert dict(back.fabric_scope.counts) == \
+            dict(t.fabric_scope.counts)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_roundtrip_then_merge_equals_merge_then_roundtrip(self, seed):
+        a, b = _populated_telemetry(seed), _populated_telemetry(seed + 100)
+        merged_then_rt = Telemetry(workload="roll")
+        merged_then_rt.merge(a)
+        merged_then_rt.merge(b)
+        merged_then_rt = _roundtrip(merged_then_rt)
+
+        rt_then_merged = Telemetry(workload="roll")
+        rt_then_merged.merge(_roundtrip(a))
+        rt_then_merged.merge(_roundtrip(b))
+
+        assert rt_then_merged.summary() == merged_then_rt.summary()
+        assert dict(rt_then_merged.counters) == dict(merged_then_rt.counters)
+        assert dict(rt_then_merged.gauges) == dict(merged_then_rt.gauges)
+        assert rt_then_merged.latency_hist.percentile(50) == \
+            merged_then_rt.latency_hist.percentile(50)
+
+    def test_telemetry_frame_roundtrip(self):
+        t = _populated_telemetry(7)
+        frame = uplink.telemetry_frame(4, 9, t)
+        back = uplink.decode_telemetry(
+            uplink.UplinkFrame.from_bytes(frame.to_bytes()))
+        assert back.summary() == t.summary()
+
+
+# --------------------------------------------------------------- pileup ---
+class TestPileup:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_vectorized_matches_loop_oracle(self, seed):
+        rng = np.random.default_rng(seed)
+        genome = rng.integers(1, 5, 200).astype(np.int32)
+        reads = rng.integers(1, 5, (20, 30)).astype(np.int32)
+        pos = rng.integers(-5, 195, 20)     # includes unmapped + overhang
+        np.testing.assert_allclose(
+            vc.build_pileup(genome, reads, pos),
+            vc.build_pileup_loop(genome, reads, pos))
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_incremental_state_matches_batch(self, seed):
+        rng = np.random.default_rng(seed + 50)
+        genome = rng.integers(1, 5, 150).astype(np.int32)
+        reads = rng.integers(1, 5, (18, 24)).astype(np.int32)
+        pos = rng.integers(0, 126, 18)
+        state = vc.PileupState(genome)
+        # arbitrary split: array batch, then ragged list batch
+        state.ingest(reads[:7], pos[:7])
+        ragged = [reads[i, : rng.integers(5, 25)] for i in range(7, 18)]
+        state.ingest(ragged, pos[7:])
+        full = vc.base_counts(
+            len(genome),
+            np.concatenate([reads[:7]] + [
+                np.pad(r, (0, 24 - len(r)))[None] for r in ragged]),
+            pos,
+            lengths=np.array([24] * 7 + [len(r) for r in ragged]))
+        np.testing.assert_allclose(state.counts, full)
+        assert state.n_reads == 18
+        np.testing.assert_allclose(
+            state.features(),
+            vc.counts_to_features(genome, full))
+
+
+# -------------------------------------------------- incremental detect ----
+class TestIncrementalDetect:
+    @pytest.mark.parametrize("seed", range(3))
+    def test_incremental_equals_batch(self, seed):
+        rng = np.random.default_rng(seed + 9)
+        panel = pathogen.Panel.build(
+            {"a": rng.integers(1, 5, 300).astype(np.int32),
+             "b": rng.integers(1, 5, 300).astype(np.int32)},
+            with_index=False)
+        cfg = pathogen.DetectConfig(window=96, min_reads=2,
+                                    min_abundance=0.01)
+        # half real reads (substrings of genome a), half noise
+        reads = np.zeros((12, 64), np.int32)
+        lens = rng.integers(40, 65, 12)
+        for i in range(12):
+            if i < 6:
+                start = rng.integers(0, 300 - lens[i])
+                reads[i, :lens[i]] = panel.genomes[0][start:start + lens[i]]
+            else:
+                reads[i, :lens[i]] = rng.integers(1, 5, lens[i])
+        batch_rep = pathogen.detect(panel, reads, cfg, read_lens=lens)
+
+        inc = pathogen.IncrementalDetector(panel, cfg)
+        split = rng.integers(1, 11)
+        inc.ingest(reads[:split], read_lens=lens[:split])
+        rep = inc.ingest(reads[split:], read_lens=lens[split:])
+        assert rep.counts == batch_rep.counts
+        assert rep.present == batch_rep.present
+        np.testing.assert_array_equal(rep.read_assignment,
+                                      batch_rep.read_assignment)
+
+
+# -------------------------------------------- aggregator invariance -------
+PAD_LEN = 64
+GENOME_LEN = 300
+
+
+def _panel_and_genome(seed: int):
+    rng = np.random.default_rng(seed)
+    host = rng.integers(1, 5, GENOME_LEN).astype(np.int32)
+    px = rng.integers(1, 5, GENOME_LEN).astype(np.int32)
+    py = rng.integers(1, 5, GENOME_LEN).astype(np.int32)
+    panel = pathogen.Panel.build({"px": px, "py": py}, with_index=False)
+    return panel, host, px
+
+
+def _frames_for(rng, panel, host, px, n_devices: int):
+    """Unique read + telemetry frames across devices: a mix of pathogen
+    reads, host reads (mapped, feeding the pileup), and noise."""
+    frames = []
+    seqs = {d: 0 for d in range(n_devices)}
+    for d in range(n_devices):
+        for i in range(rng.randint(3, 6)):
+            kind = rng.random()
+            length = rng.randint(36, PAD_LEN)
+            if kind < 0.4:      # pathogen read
+                start = rng.randint(0, GENOME_LEN - length)
+                bases, pos = px[start:start + length], -1
+            elif kind < 0.8:    # host read, mapped -> pileup
+                start = rng.randint(0, GENOME_LEN - length)
+                bases, pos = host[start:start + length], start
+            else:               # noise
+                bases = np.array([rng.randint(1, 4) for _ in range(length)],
+                                 np.int32)
+                pos = -1
+            rec = FakeRecord(read_id=i, bases=np.asarray(bases, np.int32),
+                             mapped_pos=pos,
+                             samples_at_decision=length * 4,
+                             samples_sequenced=length * 4,
+                             total_samples=length * 8)
+            frames.append(uplink.read_frame(d, seqs[d], rec))
+            seqs[d] += 1
+        tel = Telemetry(workload="adaptive_sampling")
+        tel.completed = seqs[d]
+        frames.append(uplink.telemetry_frame(d, seqs[d], tel))
+        seqs[d] += 1
+    return frames
+
+
+def _aggregator(panel, genome):
+    cfg = pathogen.DetectConfig(window=96, min_reads=2, min_abundance=0.01)
+    return AggregatorEngine(panel, genome=genome, detect_cfg=cfg,
+                            pad_len=PAD_LEN)
+
+
+def _state(agg: AggregatorEngine):
+    rep = agg.detector.report()
+    return {
+        "present": rep.present,
+        "counts": rep.counts,
+        "reads": agg.reads_ingested,
+        "device_reads": dict(agg.device_reads),
+        "pileup": agg.pileup.counts.copy(),
+        "n_pileup_reads": agg.pileup.n_reads,
+    }
+
+
+def _feed(agg, frames, rng=None):
+    """Deliver frames; with an rng, in randomly-sized step batches."""
+    i = 0
+    while i < len(frames):
+        n = rng.randint(1, 5) if rng is not None else len(frames)
+        for f in frames[i:i + n]:
+            agg.submit(f)
+        agg.step()
+        i += n
+    agg.drain()
+
+
+def check_reorder_dup_invariance(rng: random.Random):
+    """Any order, any duplication, any step grouping: same surveillance."""
+    panel, host, px = _panel_and_genome(11)     # fixed shapes: one compile
+    frames = _frames_for(rng, panel, host, px, n_devices=rng.randint(2, 4))
+
+    baseline = _aggregator(panel, host)
+    _feed(baseline, frames)
+    want = _state(baseline)
+
+    perturbed = list(frames)
+    rng.shuffle(perturbed)
+    dups = [f for f in frames if rng.random() < 0.4]
+    perturbed += dups
+    rng.shuffle(perturbed)
+    agg = _aggregator(panel, host)
+    _feed(agg, perturbed, rng=rng)
+
+    got = _state(agg)
+    assert got["present"] == want["present"]
+    assert got["counts"] == want["counts"]      # no double counting
+    assert got["reads"] == want["reads"]
+    assert got["device_reads"] == want["device_reads"]
+    np.testing.assert_allclose(got["pileup"], want["pileup"])
+    assert got["n_pileup_reads"] == want["n_pileup_reads"]
+    assert agg.telemetry.counters.get("frames.dup", 0) == len(dups)
+
+
+def check_dropout_reduces_to_subset(rng: random.Random):
+    """A device going dark == that device's undelivered tail never existed."""
+    panel, host, px = _panel_and_genome(11)
+    n_dev = rng.randint(2, 4)
+    frames = _frames_for(rng, panel, host, px, n_devices=n_dev)
+    dark = rng.randrange(n_dev)
+    dark_frames = [f for f in frames if f.device_id == dark]
+    cut = rng.randint(0, len(dark_frames))
+    delivered = [f for f in frames
+                 if f.device_id != dark or f.seq < cut]
+
+    baseline = _aggregator(panel, host)
+    _feed(baseline, delivered)
+
+    agg = _aggregator(panel, host)
+    shuffled = list(delivered)
+    rng.shuffle(shuffled)
+    _feed(agg, shuffled, rng=rng)
+
+    assert _state(agg)["counts"] == _state(baseline)["counts"]
+    assert _state(agg)["present"] == _state(baseline)["present"]
+    assert agg.reads_ingested == baseline.reads_ingested
+
+
+CHECKERS = [check_reorder_dup_invariance, check_dropout_reduces_to_subset]
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("checker", CHECKERS,
+                         ids=lambda c: c.__name__.replace("check_", ""))
+def test_aggregator_properties_seeded(checker, seed):
+    checker(random.Random(seed))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1),
+       which=st.integers(min_value=0, max_value=len(CHECKERS) - 1))
+def test_aggregator_properties_hypothesis(seed, which):
+    CHECKERS[which](random.Random(seed))
+
+
+class TestAggregatorEdgeCases:
+    def test_undecodable_frames_counted_not_raised(self):
+        panel, host, _ = _panel_and_genome(11)
+        agg = _aggregator(panel, host)
+        agg.submit(b"junk-bytes")
+        agg.submit(b"")
+        agg.step()
+        assert agg.telemetry.counters["frames.decode_error"] == 2
+        assert agg.reads_ingested == 0
+
+    def test_step_idle_returns_false(self):
+        panel, host, _ = _panel_and_genome(11)
+        agg = _aggregator(panel, host)
+        assert agg.step() is False
+
+    def test_latest_telemetry_snapshot_wins(self):
+        """Cumulative snapshots replace — resent/updated snapshots never
+        double-count in the rollup."""
+        panel, host, _ = _panel_and_genome(11)
+        agg = _aggregator(panel, host)
+        t1 = Telemetry(workload="adaptive_sampling")
+        t1.completed, t1.bases = 3, 300
+        t2 = Telemetry(workload="adaptive_sampling")
+        t2.completed, t2.bases = 5, 500
+        agg.submit(uplink.telemetry_frame(0, 0, t1))
+        agg.submit(uplink.telemetry_frame(0, 1, t2))
+        agg.step()
+        roll = agg.fleet_rollup()
+        assert roll.completed == 5 and roll.bases == 500
+
+
+# ----------------------------------------------------------- end to end ---
+@pytest.mark.slow
+def test_end_to_end_field_scenario(tmp_path):
+    """3 edge devices (1 infected) through the lossy channel: outbreak
+    detected, decoy silent, reads conserved exactly, wire bar met."""
+    from repro.field import FieldSpec, run_field_scenario
+
+    spec = FieldSpec(n_devices=3, n_infected=1, host_len=2000,
+                     pathogen_len=1000, n_reads=16, min_reads=2,
+                     min_abundance=0.01, detect_window=192,
+                     max_delay_ticks=2, dup_prob=0.1, seed=3)
+    trace = tmp_path / "trace_field.json"
+    res = run_field_scenario(spec, trace_path=str(trace))
+
+    ob = res["outbreak"]
+    assert ob["detected"] and ob["decoy_absent"]
+    assert ob["latency_ticks"] is not None and ob["latency_ticks"] >= 0
+
+    cons = res["conservation"]
+    assert cons["per_device_exact"]
+    assert cons["accepted_reads_sum"] == cons["reads_ingested_unique"]
+
+    wire = res["wire"]
+    assert wire["reduction_vs_sequenced"] >= 20
+    assert wire["read_path_reduction"] >= 20
+    assert wire["bytes_on_wire"] == (wire["read_frame_bytes"]
+                                     + wire["telemetry_frame_bytes"])
+
+    assert res["fleet_rollup"]["devices_reporting"] == 3
+    doc = json.loads(trace.read_text())
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("ph") == "M" and e.get("name") == "process_name"}
+    assert len(names) >= 2      # device + aggregator tracks, one timeline
