@@ -104,6 +104,27 @@ def _cases(quick: bool, int8: bool = False):
                 lambda tune, fab: ops.ssd_scan(x, la, b, c, fabric=fab,
                                                **tune))
 
+    def fused_case(lanes, chunk):
+        # the flowcell tick shape: step-codec CNN over `lanes` channels —
+        # args/kwargs mirror the fused_stream dispatch signature so the
+        # registered bucket/supported functions see the real thing
+        from repro.data.flowcell import step_basecaller
+        from repro.kernels import fused_stream as fs
+        from repro.realtime.runtime import init_lane_state
+        cfg, params = step_basecaller()
+        state = init_lane_state(cfg, lanes)
+        rows = jax.random.normal(key(0), (lanes, chunk), jnp.float32)
+        pads = jnp.zeros((lanes, chunk // cfg.total_stride), jnp.float32)
+        reset = jnp.zeros((lanes,), jnp.float32)
+        args = (rows, pads, reset, state["prev_class"], state["bases"],
+                state["ticks"], tuple(state["conv"]), params)
+        kwargs = {"cfg": cfg,
+                  "precisions": ("auto",) * len(fs._specs(cfg))}
+        return (args, kwargs,
+                lambda tune, fab: fs.fused_stream_step(
+                    params, state, rows, pads, reset, cfg=cfg, fabric=fab,
+                    **tune))
+
     if quick:
         return {
             "matmul": ([matmul_case(256, 256, 256)],
@@ -121,6 +142,8 @@ def _cases(quick: bool, int8: bool = False):
                                       block_k=[128, 256])),
             "ssd_scan": ([ssd_case(256, 16, 32)],
                          _grid(chunk=[64, 128, 256])),
+            "fused_stream": ([fused_case(64, 128), fused_case(512, 256)],
+                             _grid(block_l=[8, 16, 32, 64])),
         }
     return {
         "matmul": ([matmul_case(256, 256, 256), matmul_case(512, 512, 512),
@@ -140,13 +163,18 @@ def _cases(quick: bool, int8: bool = False):
                                   block_k=[128, 256, 512])),
         "ssd_scan": ([ssd_case(256, 16, 32), ssd_case(1024, 64, 64)],
                      _grid(chunk=[64, 128, 256, 512])),
+        "fused_stream": ([fused_case(64, 128), fused_case(256, 256),
+                          fused_case(512, 256)],
+                         _grid(block_l=[8, 16, 32, 64, 128])),
     }
 
 
 def tune(target: str, quick: bool, n: int, warmup: int,
-         int8: bool = False) -> dict:
+         int8: bool = False, only: set[str] | None = None) -> dict:
     table: dict = {}
     for op, (cases, grid) in _cases(quick, int8).items():
+        if only is not None and op not in only:
+            continue
         spec = fabric.op_spec(op)
         grid = list(grid)
         table[op] = {"default": dict(spec.tunables)}
@@ -187,13 +215,19 @@ def main() -> None:
                          "bucket that learns precision=\"int8\" quantizes "
                          "float operands — review the table before "
                          "checking it in)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated op names to sweep (e.g. "
+                         "'fused_stream'); others are left out of the "
+                         "emitted table — merge by hand")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: print to stdout)")
     ap.add_argument("-n", type=int, default=3, help="timed reps per combo")
     ap.add_argument("--warmup", type=int, default=1)
     args = ap.parse_args()
 
-    table = tune(args.target, args.quick, args.n, args.warmup, args.int8)
+    only = set(args.only.split(",")) if args.only else None
+    table = tune(args.target, args.quick, args.n, args.warmup, args.int8,
+                 only=only)
     table["_meta"] = {
         "target": args.target,
         "backend": jax.default_backend(),

@@ -169,6 +169,38 @@ def stream_state_spec(cfg: BasecallerConfig = BasecallerConfig()):
             for k, s, cin in zip(cfg.kernels, cfg.strides, cins)]
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamLayerSpec:
+    """Static geometry of one streaming conv layer — the carry layout a
+    fused kernel consumes (``repro.kernels.fused_stream`` blocks over lanes
+    and keeps ``(block_l, carry_rows, cin)`` resident in VMEM per layer)."""
+    name: str
+    ksize: int
+    stride: int
+    cin: int
+    cout: int
+    carry_rows: int          # K - stride input rows carried across chunks
+    activation: str          # "relu" for hidden layers, "none" for the head
+    is_head: bool            # k=1/s=1: lowered as a GEMM, carries no state
+
+
+def stream_layer_specs(cfg: BasecallerConfig = BasecallerConfig()
+                       ) -> tuple[StreamLayerSpec, ...]:
+    """The full per-layer streaming layout of this CNN, in order."""
+    from repro.kernels.conv1d import stream_carry_len
+
+    n = len(cfg.kernels)
+    cins = (cfg.in_channels,) + cfg.channels[:-1]
+    return tuple(
+        StreamLayerSpec(
+            name=f"conv{i + 1}", ksize=k, stride=s, cin=cin, cout=cout,
+            carry_rows=stream_carry_len(k, s),
+            activation="relu" if i < n - 1 else "none",
+            is_head=(k == 1 and s == 1))
+        for i, (k, s, cin, cout) in enumerate(
+            zip(cfg.kernels, cfg.strides, cins, cfg.channels)))
+
+
 def init_stream_state(cfg: BasecallerConfig, batch: int):
     """Zero carries for ``batch`` concurrent channel sessions.
 

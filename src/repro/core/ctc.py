@@ -113,6 +113,19 @@ def _collapse(best: jax.Array, prev: jax.Array):
     return jnp.where(mask, out, 0), lens
 
 
+def collapse(best: jax.Array, prev: jax.Array):
+    """Public CTC collapse: compact kept classes (non-blank, != preceding
+    frame's class) left, zero-fill the tail.
+
+    ``best``/``prev`` are (B, T) per-frame classes where ``prev[:, t]`` is
+    the class of the frame preceding ``best[:, t]`` (BLANK at stream start).
+    Returns ``(tokens (B, T), lens (B,))``.  This is the exact collapse the
+    fused streaming kernel (``repro.kernels.fused_stream``) re-implements
+    lane-resident; parity tests pin the two bitwise.
+    """
+    return _collapse(best, prev)
+
+
 def greedy_decode(logits: jax.Array, paddings: jax.Array | None = None):
     """Collapse best-per-frame classes.  Returns (B, T) tokens with 0 padding
     and (B,) decoded lengths; bases stay 1..4."""

@@ -70,7 +70,8 @@ class AdaptiveSamplingEngine:
                  channels: int = 32, chunk: int = 256, policy=None,
                  align_cfg=None, use_kernel=fabric_mod.UNSET,
                  interpret=fabric_mod.UNSET, fabric=None, mesh=None,
-                 pipeline_depth: int = 1, flowcell=None, trace=False):
+                 pipeline_depth: int = 1, flowcell=None, trace=False,
+                 fused=None):
         import warnings
 
         from repro.realtime import (AdaptiveSamplingRuntime, PolicyConfig,
@@ -126,7 +127,7 @@ class AdaptiveSamplingEngine:
             channels=channels, chunk_samples=chunk, fabric=self.fabric,
             mesh=resolve_lane_mesh(mesh, channels),
             pipeline_depth=pipeline_depth, source=self.flowcell,
-            tracer=trace)
+            tracer=trace, fused=fused)
 
     @property
     def telemetry(self):
@@ -190,13 +191,14 @@ class AdaptiveSamplingEngine:
 @register("adaptive_sampling", presets={
     "default": {"channels": 32, "chunk": 256},
     "smoke": {"channels": 4, "chunk": 128},
-    "edge_int8": {"channels": 32, "chunk": 256, "quantize": "int8"},
+    "edge_int8": {"channels": 32, "chunk": 256, "quantize": "int8",
+                  "fused": True},
     # a full 512-channel flowcell on the deterministic step encoder + its
     # exact hand-built decoder CNN: meaningful accept/eject decisions out
     # of the box, no training required
     "flowcell_512": {"channels": 512, "chunk": 256,
                      "flowcell": {"encoder": "step", "n_reads": 1024},
-                     "pipeline_depth": 2, "mesh": "auto"},
+                     "pipeline_depth": 2, "mesh": "auto", "fused": True},
     "flowcell_smoke": {"channels": 64, "chunk": 128,
                        "flowcell": {"encoder": "step", "n_reads": 128,
                                     "read_len": (96, 192)},
@@ -208,14 +210,19 @@ def build_adaptive_sampling(params=None, cfg=None, reference=None,
                             use_kernel=fabric_mod.UNSET,
                             interpret=fabric_mod.UNSET, fabric=None,
                             mesh=None, pipeline_depth: int = 1,
-                            flowcell=None, seed: int = 0, trace=False):
+                            flowcell=None, seed: int = 0, trace=False,
+                            fused=None):
     """Builder: supply trained (params, cfg) + reference/targets, or get a
     fresh CNN over a random reference with the first quarter as target.
     ``quantize="int8"`` (the ``edge_int8`` preset) stores the CNN weights
     int8 once; the Read-Until loop then basecalls on fixed-point MACs.
     ``flowcell=`` turns the engine into an N-channel flowcell server (see
     the ``flowcell_512`` preset); a step-encoded flowcell with no explicit
-    params gets the exact :func:`repro.data.flowcell.step_basecaller`."""
+    params gets the exact :func:`repro.data.flowcell.step_basecaller`.
+    ``fused=True`` dispatches the per-tick conv→CTC→counter chain as the
+    single ``"fused_stream"`` fabric op (one lane-major Pallas program);
+    ``None`` auto-opts in when the fabric policy places that op on a
+    Pallas target.  Decisions are bit-identical either way."""
     import jax
 
     from repro.core import basecaller as bc
@@ -244,4 +251,5 @@ def build_adaptive_sampling(params=None, cfg=None, reference=None,
         params, cfg, reference, targets, channels=channels, chunk=chunk,
         policy=policy, align_cfg=align_cfg, use_kernel=use_kernel,
         interpret=interpret, fabric=fabric, mesh=mesh,
-        pipeline_depth=pipeline_depth, flowcell=flowcell, trace=trace)
+        pipeline_depth=pipeline_depth, flowcell=flowcell, trace=trace,
+        fused=fused)

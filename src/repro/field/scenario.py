@@ -48,13 +48,15 @@ class FieldSpec:
     n_reads: int = 32               # molecules per device
     read_len: tuple[int, int] = (96, 160)
     telemetry_every: int = 16
+    full_reads: bool = True         # accepted reads uplink the full call
     # lossy channel
     max_delay_ticks: int = 3
     dup_prob: float = 0.05
     dropout_device: int = -1        # device id that goes dark (-1: none)
     dropout_tick: int = 0           # tick it stops sending
-    # aggregator
-    pad_len: int = 128
+    # aggregator: pad_len covers a full read (read_len hi), not just the
+    # decision prefix, so full-read uplinks are never clipped when scored
+    pad_len: int = 192
     min_reads: int = 5
     min_abundance: float = 0.02
     detect_window: int = 256
@@ -136,7 +138,7 @@ def build_field(spec: FieldSpec, *, tracer=None, fabric=None):
             d, reference, targets, channels=spec.channels, chunk=spec.chunk,
             n_reads=spec.n_reads, read_len=spec.read_len,
             seed=spec.seed * 1000 + d, telemetry_every=spec.telemetry_every,
-            trace=tracer, fabric=fabric))
+            trace=tracer, fabric=fabric, full_reads=spec.full_reads))
 
     fleet = Fleet(trace=tracer if tracer is not None else False,
                   max_pending=8192)

@@ -1,0 +1,453 @@
+"""Fused persistent streaming step: conv stack → CTC collapse → counters
+in ONE lane-major Pallas program.
+
+The paper's SoC keeps the basecall hot loop resident in on-chip memory —
+activations never bounce through DRAM between accelerator dispatches.  The
+unfused flowcell tick is already one jitted fn, but *inside* it each conv
+layer, the k=1 GEMM head, the CTC greedy collapse, and the per-lane policy
+counters are separate fabric dispatches with HBM round-trips between them.
+This module collapses that chain flash-decoding style:
+
+  * **grid = lane blocks.**  One program instance owns ``block_l`` channel
+    lanes; everything those lanes need for the whole chunk — conv carries,
+    intermediate activations, the CTC ``prev_class`` carry, the per-lane
+    ``bases``/``ticks`` counters — stays resident in VMEM across
+    conv1..N → head GEMM → incremental CTC collapse → counter epilogue.
+    Only tokens, lengths, counters and the next-chunk carries are written
+    back, once per tick.
+  * **lane-reset folding.**  A ``reset`` mask rides into the kernel; stale
+    state of freshly recycled lanes (carries, ``prev_class`` → BLANK,
+    counters → 0) is zeroed *inside* the program, replacing the host-side
+    reset scatter the unfused tick performs — bitwise-equal by construction
+    (zeroing then computing == computing on zeroed inputs).
+  * **native int8.**  Layers whose weights are stored
+    :class:`repro.quant.QuantizedTensor` (calibrated static activation
+    scales) MAC int8→int32 in-kernel and dequantize with the exact
+    ``ops._int8_epilogue`` arithmetic; counted under
+    ``fabric.precision.fused_stream.int8``.  Integer GEMMs have one answer,
+    so fused int8 == unfused int8 bitwise.
+
+Registered as the fabric op ``"fused_stream"`` with the usual three
+targets.  The **reference target literally composes the unfused pieces**
+(`ops._conv1d_reference` / `ops._matmul_reference` per layer — the same
+functions ``ops.conv1d_stream`` / ``ops.mat_mul`` dispatch to — then
+``ctc.greedy_decode_stream`` and the counter update), so reference parity
+is definitional, and the whole chain is wrapped in
+``fabric.batched_counts()`` so it reports **one** counter-flush event per
+tick instead of one host callback per inner op.
+
+Fallback taxonomy (counted ``fabric.fallback.fused_stream.<reason>``):
+
+  ``lanes_lt_8``       fewer than 8 lanes reach the op (per *shard* under a
+                       lane mesh — sharding can suppress the kernel)
+  ``dtype``            basecaller configured for a non-float32 dtype
+  ``int8_dynamic_act`` quantized weights without calibrated act scales (the
+                       dynamic absmax is a cross-lane reduction a
+                       lane-blocked program cannot take)
+  ``precision_policy`` a tuned ``precision="int8"`` bucket on float weights
+                       (per-call weight requant stays on the unfused path)
+  ``tpu_channel_align`` compiled-mode lane-tile floors (cout < 128) on a
+                       real TPU backend; interpret mode has no such floor
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ctc
+from repro.kernels import compat
+from repro.kernels import fabric
+from repro.kernels import fabric as _fabric_mod
+from repro.kernels import ops as _ops
+from repro.kernels.fabric import pow2_bucket as _pb
+from repro.kernels.matmul import _ACTIVATIONS
+from repro.quant import core as qcore
+from repro.utils.shapes import next_multiple
+
+QMAX = qcore.QMAX
+
+
+def _specs(cfg):
+    from repro.core import basecaller as bc
+    return bc.stream_layer_specs(cfg)
+
+
+def _layer_precisions(cfg, lanes: int, chunk: int, policy) -> tuple:
+    """The per-layer precision policy the *unfused* step would resolve.
+
+    The unfused path consults the conv1d/matmul tuning buckets per layer; a
+    bucket that pins ``precision="int8"`` must behave identically when the
+    layer runs inside the fused program, so the fused wrapper resolves the
+    same buckets up front and threads the answers through dispatch (static
+    tuple — part of the trace signature)."""
+    out = []
+    t = chunk
+    for sp in _specs(cfg):
+        if sp.is_head:
+            args = (_fabric_mod.ShapeProxy((lanes * t, sp.cin)),
+                    _fabric_mod.ShapeProxy((sp.cin, sp.cout)))
+            tune = _fabric_mod.resolved_tuning("matmul", args, {}, policy)
+        else:
+            args = (_fabric_mod.ShapeProxy((lanes, t + sp.carry_rows,
+                                            sp.cin)),
+                    _fabric_mod.ShapeProxy((sp.ksize, sp.cin, sp.cout)))
+            tune = _fabric_mod.resolved_tuning("conv1d", args, {}, policy)
+        out.append(tune.get("precision", "auto"))
+        t //= sp.stride
+    return tuple(out)
+
+
+# ========================================================= public wrapper ==
+def fused_stream_step(params, lane_state, rows, frame_pads, reset=None, *,
+                      cfg, fabric=None, block_l=None):
+    """One fused flowcell tick over all lanes.
+
+    ``lane_state`` is the runtime's lane-major pytree (``conv`` carries,
+    ``prev_class``, ``bases``, ``ticks``); ``rows`` (lanes, chunk) raw
+    signal; ``frame_pads`` (lanes, n_frames) 1.0 where a frame is padding;
+    ``reset`` (lanes,) nonzero where the lane starts a new read this tick
+    (its stale state is zeroed inside the op).  Returns
+    ``(tokens, lens, new_lane_state)`` — the exact contract of the unfused
+    ``build_step_fn`` step after ``_reset_lanes``.
+    """
+    pol = _fabric_mod.as_policy(fabric)
+    lanes, chunk = rows.shape
+    if chunk % cfg.total_stride:
+        raise ValueError(f"chunk length {chunk} must be a multiple of "
+                         f"total_stride={cfg.total_stride}")
+    if reset is None:
+        reset = jnp.zeros((lanes,), jnp.float32)
+    precisions = _layer_precisions(cfg, lanes, chunk, pol)
+    with _fabric_mod.batched_counts():
+        return _fabric_mod.dispatch(
+            "fused_stream", rows, frame_pads, reset,
+            lane_state["prev_class"], lane_state["bases"],
+            lane_state["ticks"], tuple(lane_state["conv"]), params,
+            cfg=cfg, precisions=precisions, fabric=pol,
+            tune={"block_l": block_l})
+
+
+# ======================================================= reference target ==
+def _fused_reference(rows, pads, reset, prev, bases, ticks, conv, params, *,
+                     cfg, precisions, tune=None):
+    """Composition of the unfused pieces — parity is definitional.
+
+    Calls the exact per-layer reference functions ``conv1d_stream`` /
+    ``mat_mul`` dispatch to (with the same resolved precision policy), then
+    ``ctc.greedy_decode_stream`` and the counter update, with the lane
+    reset folded in up front."""
+    del tune
+    specs = _specs(cfg)
+    rmask = reset > 0
+    x = rows.astype(cfg.dtype)[..., None]
+    if any(qcore.is_quantized(params[sp.name]["w"]) for sp in specs):
+        fabric.record("fabric.precision.fused_stream.int8")
+    new_conv = []
+    for i, sp in enumerate(specs):
+        p = params[sp.name]
+        if sp.is_head:
+            w = p["w"]
+            if qcore.is_quantized(w):
+                w2 = qcore.QuantizedTensor(
+                    q=w.q[0], scale=w.scale,
+                    axis=None if w.axis is None else 1,
+                    act_scale=w.act_scale)
+            else:
+                w2 = w[0]
+            bsz, t, cin = x.shape
+            y = _ops._matmul_reference(
+                x.reshape(bsz * t, cin), w2, p["b"],
+                activation=sp.activation, tune={"precision": precisions[i]})
+            x = y.reshape(bsz, t, sp.cout)
+            new_conv.append(conv[i])
+        else:
+            carry = conv[i]
+            if sp.carry_rows:
+                carry = jnp.where(rmask[:, None, None],
+                                  jnp.zeros((), carry.dtype), carry)
+            buf = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+            x = _ops._conv1d_reference(
+                buf, p["w"], p["b"], stride=sp.stride,
+                activation=sp.activation, tune={"precision": precisions[i]})
+            new_conv.append(buf[:, buf.shape[1] - sp.carry_rows:, :])
+    prev0 = jnp.where(rmask, ctc.BLANK, prev)
+    tokens, lens, new_prev = ctc.greedy_decode_stream(x, prev0, pads)
+    new_lane = {
+        "conv": new_conv,
+        "prev_class": new_prev,
+        "bases": jnp.where(rmask, 0, bases) + lens.astype(jnp.int32),
+        "ticks": jnp.where(rmask, 0, ticks) + 1,
+    }
+    return tokens, lens, new_lane
+
+
+# ========================================================== pallas target ==
+def _fused_kernel(refs, *, meta, block_l, chunk, n_frames):
+    """The persistent program body for one block of lanes.
+
+    ``refs`` is the flat (inputs..., outputs...) ref list; ``meta`` is the
+    static per-layer plan built by :func:`_fused_pallas`."""
+    it = iter(refs)
+    rows_ref = next(it)
+    pads_ref = next(it)
+    reset_ref = next(it)
+    prev_ref = next(it)
+    bases_ref = next(it)
+    ticks_ref = next(it)
+    carry_in = {}
+    w_refs = {}
+    for m in meta:
+        if m["carry_rows"]:
+            carry_in[m["i"]] = next(it)
+        if m["quantized"]:
+            w_refs[m["i"]] = (next(it), next(it), next(it), next(it))
+        else:
+            w_refs[m["i"]] = (next(it), next(it))
+    tokens_ref = next(it)
+    lens_ref = next(it)
+    prev_out_ref = next(it)
+    bases_out_ref = next(it)
+    ticks_out_ref = next(it)
+    carry_out = {m["i"]: next(it) for m in meta if m["carry_rows"]}
+
+    rmask = reset_ref[...] > 0.0                       # (bl, 1)
+    x = rows_ref[...].astype(jnp.float32)[..., None]   # (bl, T, 1)
+    for m in meta:
+        i, ksize, stride = m["i"], m["ksize"], m["stride"]
+        t_in = x.shape[1]
+        if m["carry_rows"]:
+            carry = jnp.where(rmask[:, :, None], 0.0, carry_in[i][...])
+            buf = jnp.concatenate([carry, x], axis=1)
+            carry_out[i][...] = buf[:, buf.shape[1] - m["carry_rows"]:, :]
+        else:
+            buf = x
+        t_out = t_in // stride
+        if m["quantized"]:
+            wq_ref, scale_ref, bias_ref, sa_ref = w_refs[i]
+            # static-act-scale quantization, exactly qcore.quantize: the
+            # same round/clip the unfused int8 path applies per layer
+            sa = sa_ref[0, 0]
+            q = jnp.clip(jnp.round(buf / sa), -QMAX, QMAX).astype(jnp.int8)
+            acc = None
+            for k in range(ksize):
+                qk = jax.lax.slice(
+                    q, (0, k, 0),
+                    (block_l, k + (t_out - 1) * stride + 1, q.shape[2]),
+                    (1, stride, 1))
+                part = jax.lax.dot_general(
+                    qk, wq_ref[k], (((2,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                acc = part if acc is None else acc + part
+            # ops._int8_epilogue arithmetic, term for term
+            out = acc.astype(jnp.float32) * scale_ref[...]
+            out = out + bias_ref[...].astype(out.dtype)
+            x = _ACTIVATIONS[m["activation"]](out).astype(jnp.float32)
+        else:
+            w_ref, bias_ref = w_refs[i]
+            acc = None
+            for k in range(ksize):
+                xk = jax.lax.slice(
+                    buf, (0, k, 0),
+                    (block_l, k + (t_out - 1) * stride + 1, buf.shape[2]),
+                    (1, stride, 1))
+                part = jax.lax.dot_general(
+                    xk, w_ref[k], (((2,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc = part if acc is None else acc + part
+            acc = acc + bias_ref[...].astype(acc.dtype)
+            x = _ACTIVATIONS[m["activation"]](acc).astype(jnp.float32)
+
+    # -------- incremental CTC collapse, lane-resident (== ctc.collapse) --
+    logits = x                                          # (bl, F, C)
+    best = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    best = jnp.where(pads_ref[...] > 0, ctc.BLANK, best)
+    prev0 = jnp.where(rmask, ctc.BLANK, prev_ref[...])  # (bl, 1)
+    prevs = jnp.concatenate([prev0, best[:, :n_frames - 1]], axis=1)
+    keep = (best != ctc.BLANK) & (best != prevs)
+    lens = jnp.sum(keep.astype(jnp.int32), axis=1, keepdims=True)
+    pos = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+    # scatter-free compaction: each kept frame lands at its unique pos, so
+    # a broadcast-compare + sum reproduces the scatter-max collapse exactly
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_frames), 2)
+    onehot = (pos[:, :, None] == iota) & keep[:, :, None]
+    tokens = jnp.sum(jnp.where(onehot, best[:, :, None], 0), axis=1)
+
+    # ------------------------------------------------- counter epilogue --
+    tokens_ref[...] = tokens
+    lens_ref[...] = lens
+    prev_out_ref[...] = best[:, n_frames - 1:]
+    bases_out_ref[...] = jnp.where(rmask, 0, bases_ref[...]) + lens
+    ticks_out_ref[...] = jnp.where(rmask, 0, ticks_ref[...]) + 1
+
+
+def _pad_lanes(a, lanes_pad, fill=0):
+    pad = lanes_pad - a.shape[0]
+    if pad == 0:
+        return a
+    widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=fill)
+
+
+def _fused_pallas(rows, pads, reset, prev, bases, ticks, conv, params, *,
+                  cfg, precisions, interpret, tune):
+    del precisions  # supported() already vetoed precision-policy requants
+    specs = _specs(cfg)
+    lanes, chunk = rows.shape
+    n_frames = chunk // cfg.total_stride
+    bl = min(tune["block_l"], lanes)
+    lanes_pad = next_multiple(lanes, bl)
+
+    # ---- static per-layer plan + flat operand list -----------------------
+    any_int8 = False
+    meta, operands, in_specs = [], [], []
+
+    def add(arr, spec):
+        operands.append(arr)
+        in_specs.append(spec)
+
+    add(_pad_lanes(rows, lanes_pad),
+        pl.BlockSpec((bl, chunk), lambda i: (i, 0)))
+    # padding lanes are all-padding frames: BLANK everywhere, lens 0
+    add(_pad_lanes(pads, lanes_pad, fill=1.0),
+        pl.BlockSpec((bl, n_frames), lambda i: (i, 0)))
+    for a in (reset.astype(jnp.float32), prev, bases, ticks):
+        add(_pad_lanes(a.reshape(lanes, 1), lanes_pad),
+            pl.BlockSpec((bl, 1), lambda i: (i, 0)))
+    for i, sp in enumerate(specs):
+        p = params[sp.name]
+        w = p["w"]
+        quantized = qcore.is_quantized(w)
+        any_int8 = any_int8 or quantized
+        meta.append({"i": i, "ksize": sp.ksize, "stride": sp.stride,
+                     "carry_rows": sp.carry_rows, "cout": sp.cout,
+                     "activation": sp.activation, "quantized": quantized})
+        if sp.carry_rows:
+            add(_pad_lanes(conv[i], lanes_pad),
+                pl.BlockSpec((bl, sp.carry_rows, sp.cin),
+                             lambda i: (i, 0, 0)))
+        wspec = pl.BlockSpec((sp.ksize, sp.cin, sp.cout),
+                             lambda i: (0, 0, 0))
+        vspec = pl.BlockSpec((1, sp.cout), lambda i: (0, 0))
+        if quantized:
+            # combined dequant scale (sa*sw) and the act scale, precomputed
+            # outside — the same f32 products the unfused epilogue forms
+            sa = jnp.asarray(w.act_scale, jnp.float32)
+            sw = jnp.asarray(w.scale, jnp.float32)
+            add(w.q, wspec)
+            add(jnp.broadcast_to(sa * sw, (sp.cout,)).reshape(1, sp.cout),
+                vspec)
+            add(p["b"].reshape(1, sp.cout), vspec)
+            add(sa.reshape(1, 1), pl.BlockSpec((1, 1), lambda i: (0, 0)))
+        else:
+            add(w, wspec)
+            add(p["b"].reshape(1, sp.cout), vspec)
+
+    if any_int8:
+        fabric.record("fabric.precision.fused_stream.int8")
+
+    # ---- outputs ---------------------------------------------------------
+    out_shapes = [
+        jax.ShapeDtypeStruct((lanes_pad, n_frames), jnp.int32),   # tokens
+        jax.ShapeDtypeStruct((lanes_pad, 1), jnp.int32),          # lens
+        jax.ShapeDtypeStruct((lanes_pad, 1), jnp.int32),          # prev
+        jax.ShapeDtypeStruct((lanes_pad, 1), jnp.int32),          # bases
+        jax.ShapeDtypeStruct((lanes_pad, 1), jnp.int32),          # ticks
+    ]
+    out_specs = [
+        pl.BlockSpec((bl, n_frames), lambda i: (i, 0)),
+        pl.BlockSpec((bl, 1), lambda i: (i, 0)),
+        pl.BlockSpec((bl, 1), lambda i: (i, 0)),
+        pl.BlockSpec((bl, 1), lambda i: (i, 0)),
+        pl.BlockSpec((bl, 1), lambda i: (i, 0)),
+    ]
+    for sp in specs:
+        if sp.carry_rows:
+            out_shapes.append(jax.ShapeDtypeStruct(
+                (lanes_pad, sp.carry_rows, sp.cin), cfg.dtype))
+            out_specs.append(pl.BlockSpec((bl, sp.carry_rows, sp.cin),
+                                          lambda i: (i, 0, 0)))
+
+    kernel = functools.partial(_fused_kernel_entry, meta=tuple(
+        tuple(sorted(m.items())) for m in meta), block_l=bl, chunk=chunk,
+        n_frames=n_frames)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(lanes_pad // bl,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*operands)
+
+    tokens = outs[0][:lanes]
+    lens = outs[1][:lanes, 0]
+    new_prev = outs[2][:lanes, 0]
+    new_bases = outs[3][:lanes, 0]
+    new_ticks = outs[4][:lanes, 0]
+    new_conv, j = [], 5
+    for i, sp in enumerate(specs):
+        if sp.carry_rows:
+            new_conv.append(outs[j][:lanes])
+            j += 1
+        else:
+            new_conv.append(conv[i])
+    new_lane = {"conv": new_conv, "prev_class": new_prev,
+                "bases": new_bases, "ticks": new_ticks}
+    waste = (lanes_pad - lanes) * n_frames
+    return (tokens, lens, new_lane), waste
+
+
+def _fused_kernel_entry(*refs, meta, block_l, chunk, n_frames):
+    # meta rides through functools.partial as a hashable tuple-of-tuples
+    # (pallas traces the kernel once per static config); rehydrate dicts
+    _fused_kernel(refs, meta=[dict(m) for m in meta], block_l=block_l,
+                  chunk=chunk, n_frames=n_frames)
+
+
+# =========================================================== registration ==
+def _fused_supported(args, kwargs, tune):
+    rows = args[0]
+    params = args[7]
+    cfg = kwargs["cfg"]
+    precisions = kwargs["precisions"]
+    if rows.shape[0] < 8:
+        return False, "lanes_lt_8"
+    if cfg.dtype != jnp.float32:
+        return False, "dtype"
+    for i, sp in enumerate(_specs(cfg)):
+        w = params[sp.name]["w"]
+        if qcore.is_quantized(w):
+            if w.act_scale is None:
+                return False, "int8_dynamic_act"
+            if w.axis is not None and w.axis % w.ndim != w.ndim - 1:
+                return False, "int8_axis"
+        elif precisions[i] == "int8":
+            return False, "precision_policy"
+    if jax.default_backend() == "tpu":
+        # compiled lowering needs lane-tile-aligned channel widths; the
+        # interpret target (CPU parity path) has no such floor
+        if any(sp.cout % 128 or (sp.cin % 128 and sp.cin != cfg.in_channels)
+               for sp in _specs(cfg)):
+            return False, "tpu_channel_align"
+    return True, ""
+
+
+def _fused_bucket(args, kwargs):
+    rows = args[0]
+    return f"l{_pb(rows.shape[0])}_t{_pb(rows.shape[1])}"
+
+
+fabric.register_op(
+    "fused_stream",
+    reference=_fused_reference,
+    pallas=_fused_pallas,
+    tunables={"block_l": 8},
+    supported=_fused_supported,
+    bucket=_fused_bucket,
+    reference_tune=True,
+)

@@ -540,3 +540,9 @@ def ssd_scan(x, log_a, b, c, *, chunk=None, use_kernel=_UNSET,
     return _fabric_mod.dispatch("ssd_scan", x, log_a, b, c, fabric=pol,
                                 tune={"chunk": chunk})
 
+
+# ------------------------------------------------------------ fused ops ----
+# registered last: fused_stream composes the reference paths above, so its
+# module imports this one (safe — everything it needs is already defined)
+from repro.kernels import fused_stream as _fused_stream  # noqa: E402,F401
+

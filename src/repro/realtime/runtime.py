@@ -94,7 +94,7 @@ def init_lane_state(cfg: bc.BasecallerConfig, channels: int) -> dict:
 
 
 def build_step_fn(cfg: bc.BasecallerConfig, fabric: fabric_mod.FabricPolicy,
-                  mesh=None):
+                  mesh=None, fused: bool = False):
     """One jitted tick over all lanes: basecall + CTC collapse + counters.
 
     ``(params, lane_state, rows, frame_pads) -> (tokens, lens, lane_state')``
@@ -102,19 +102,42 @@ def build_step_fn(cfg: bc.BasecallerConfig, fabric: fabric_mod.FabricPolicy,
     ``shard_map``: lane-major leaves shard over the lane axis, params
     replicate, and no collectives are needed (lanes are independent) — so
     the sharded program is arithmetically identical to the sequential one.
+
+    ``fused=True`` dispatches the whole chain as the single
+    ``"fused_stream"`` fabric op (one lane-major Pallas program — or its
+    definitionally-identical reference composition — see
+    :mod:`repro.kernels.fused_stream`).  The fused step takes one extra
+    lane-major argument, a ``reset`` mask, and folds the recycled-lane
+    state zeroing inside the op, so the runtime skips its host-side reset
+    scatter; the signature becomes
+    ``(params, lane_state, rows, frame_pads, reset) -> ...``.  Under a
+    mesh the dispatch happens inside the sharded body, so per-shard lane
+    counts drive the kernel/fallback choice (sharding can suppress the
+    kernel — counted, never silent).
     """
-    def step(params, lane, rows, frame_pads):
-        logits, conv = bc.apply_stream_core(params, lane["conv"], rows,
-                                            cfg=cfg, fabric=fabric)
-        tokens, lens, prev = ctc.greedy_decode_stream(
-            logits, lane["prev_class"], frame_pads)
-        new_lane = {
-            "conv": conv,
-            "prev_class": prev,
-            "bases": lane["bases"] + lens.astype(jnp.int32),
-            "ticks": lane["ticks"] + 1,
-        }
-        return tokens, lens, new_lane
+    if fused:
+        from repro.kernels import fused_stream as fs
+
+        def step(params, lane, rows, frame_pads, reset):
+            return fs.fused_stream_step(params, lane, rows, frame_pads,
+                                        reset, cfg=cfg, fabric=fabric)
+
+        in_specs_tail = 4
+    else:
+        def step(params, lane, rows, frame_pads):
+            logits, conv = bc.apply_stream_core(params, lane["conv"], rows,
+                                                cfg=cfg, fabric=fabric)
+            tokens, lens, prev = ctc.greedy_decode_stream(
+                logits, lane["prev_class"], frame_pads)
+            new_lane = {
+                "conv": conv,
+                "prev_class": prev,
+                "bases": lane["bases"] + lens.astype(jnp.int32),
+                "ticks": lane["ticks"] + 1,
+            }
+            return tokens, lens, new_lane
+
+        in_specs_tail = 3
 
     if mesh is not None:
         from repro.distributed.sharding import LANE_AXIS, shard_map_compat
@@ -122,7 +145,7 @@ def build_step_fn(cfg: bc.BasecallerConfig, fabric: fabric_mod.FabricPolicy,
         # pytree-prefix specs: one P() replicates the whole params tree, one
         # lane spec shards every lane-major leaf of the state tree
         step = shard_map_compat(step, mesh,
-                                in_specs=(P(), lane_p, lane_p, lane_p),
+                                in_specs=(P(),) + (lane_p,) * in_specs_tail,
                                 out_specs=(lane_p, lane_p, lane_p))
     return jax.jit(step)
 
@@ -134,7 +157,7 @@ class AdaptiveSamplingRuntime:
                  policy: PolicyConfig = PolicyConfig(), *, channels: int = 32,
                  chunk_samples: int = 256, use_kernel=fabric_mod.UNSET,
                  fabric=None, mesh=None, pipeline_depth: int = 1,
-                 source=None, tracer=None):
+                 source=None, tracer=None, fused=None):
         if chunk_samples % cfg.total_stride:
             raise ValueError(
                 f"chunk_samples={chunk_samples} must be a multiple of the "
@@ -161,7 +184,14 @@ class AdaptiveSamplingRuntime:
         # basecall placement: fabric policy (``use_kernel=`` is a shim)
         self.fabric = fabric_mod.as_policy(fabric_mod.legacy_policy(
             "AdaptiveSamplingRuntime", use_kernel, fabric=fabric))
-        self._step = build_step_fn(cfg, self.fabric, mesh)
+        # fused persistent step: explicit True/False wins; None auto-opts in
+        # exactly when the policy places the fused op on a Pallas target
+        # (so reference-policy runtimes keep the unfused chain and its
+        # per-op dispatch telemetry unless a preset/caller opts in)
+        if fused is None:
+            fused = fabric_mod.select("fused_stream", self.fabric).use_pallas
+        self.fused = bool(fused)
+        self._step = build_step_fn(cfg, self.fabric, mesh, fused=self.fused)
         self.lane_state = init_lane_state(cfg, channels)
         self.records: list[ReadRecord] = []
         self.telemetry = Telemetry(workload="adaptive_sampling",
@@ -210,8 +240,13 @@ class AdaptiveSamplingRuntime:
             # per-instance jit traces here, inside this engine's fabric
             # scope: execution-time dispatch counters stay attributed to
             # this runtime even when engines interleave in one process
-            tokens, _, _ = self._step(self.params, self.lane_state, rows,
-                                      pads)
+            if self.fused:
+                tokens, _, _ = self._step(
+                    self.params, self.lane_state, rows, pads,
+                    jnp.zeros((self.channels,), jnp.float32))
+            else:
+                tokens, _, _ = self._step(self.params, self.lane_state, rows,
+                                          pads)
             jax.block_until_ready(tokens)
             self.mapper.map_prefixes(
                 np.zeros((self.channels, self.policy.map_prefix_bases),
@@ -449,9 +484,12 @@ class AdaptiveSamplingRuntime:
         self.warmup()
         t0 = time.perf_counter()
         tel = self.telemetry
-        # one reset scatter covers both intake paths
+        # one reset scatter covers both intake paths; the fused step folds
+        # the reset inside the device program instead (a fresh lane is
+        # always busy this tick, so the mask always reaches the step)
         fresh = self._poll_source() + self._assign_free()
-        self._reset_lanes(fresh)
+        if not self.fused:
+            self._reset_lanes(fresh)
         self._begin_read_spans(fresh)
         sessions = self.scheduler.active
         busy = self.scheduler.busy
@@ -492,9 +530,17 @@ class AdaptiveSamplingRuntime:
         # jax dispatch is asynchronous: the arrays in ``pending`` are
         # futures, so the host returns from the dispatch immediately.
         with tel.scope(), tel.stage("basecall"):
-            tokens, lens, self.lane_state = self._step(
-                self.params, self.lane_state, jnp.asarray(rows),
-                jnp.asarray(frame_pads))
+            if self.fused:
+                reset = np.zeros((self.channels,), np.float32)
+                if fresh:
+                    reset[fresh] = 1.0
+                tokens, lens, self.lane_state = self._step(
+                    self.params, self.lane_state, jnp.asarray(rows),
+                    jnp.asarray(frame_pads), jnp.asarray(reset))
+            else:
+                tokens, lens, self.lane_state = self._step(
+                    self.params, self.lane_state, jnp.asarray(rows),
+                    jnp.asarray(frame_pads))
         tel.dispatches += 1
         if self._trace.enabled:
             # dispatch marker: processing of this tick's evidence lands in a

@@ -31,6 +31,22 @@ def _fresh_warning_registries():
             reg.clear()
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_cache():
+    """Free compiled executables between test modules.
+
+    XLA:CPU JIT code accumulates per-process across the whole tier-1 run
+    and never unloads while jit caches hold the executables; near the end
+    of the suite the process sits close enough to the native limit that a
+    handful of extra compilations segfaults an unrelated
+    ``backend_compile`` (observed deterministically at the same late test
+    once the suite grew past ~830 tests).  Dropping the caches at module
+    boundaries bounds the peak instead of the total — each module only
+    pays recompiles for entry points shared with earlier modules."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(1234)

@@ -496,3 +496,56 @@ class TestEngineFabric:
             got, (_, s_got) = M.mamba_block(params, x, cfg)
         _assert_close(got, want, tol=2e-3)
         _assert_close(s_got, s_want, tol=2e-3)
+
+
+class TestBatchedCounts:
+    """batched_counts(): counter increments recorded inside the context
+    accumulate and flush as ONE host callback on exit (the fused step wraps
+    its dispatch in this so a whole chunk costs one callback)."""
+
+    def test_batches_to_single_flush(self, monkeypatch):
+        flushes = []
+        real = fabric._bump
+        monkeypatch.setattr(
+            fabric, "_bump",
+            lambda items, scopes=(): (flushes.append(items),
+                                      real(items, scopes)))
+        base = fabric.counters()
+        with fabric.batched_counts():
+            fabric.record("fabric.test.a")
+            fabric.record("fabric.test.a")
+            fabric.record("fabric.test.b", 3)
+        delta = fabric.counters_delta(base)
+        assert delta["fabric.test.a"] == 2
+        assert delta["fabric.test.b"] == 3
+        assert len(flushes) == 1
+        assert dict(flushes[0]) == {"fabric.test.a": 2, "fabric.test.b": 3}
+
+    def test_nested_folds_into_outermost(self, monkeypatch):
+        flushes = []
+        real = fabric._bump
+        monkeypatch.setattr(
+            fabric, "_bump",
+            lambda items, scopes=(): (flushes.append(items),
+                                      real(items, scopes)))
+        base = fabric.counters()
+        with fabric.batched_counts():
+            fabric.record("fabric.test.outer")
+            with fabric.batched_counts():
+                fabric.record("fabric.test.inner")
+            fabric.record("fabric.test.outer")
+        delta = fabric.counters_delta(base)
+        assert delta["fabric.test.outer"] == 2
+        assert delta["fabric.test.inner"] == 1
+        assert len(flushes) == 1
+
+    def test_records_outside_context_flush_immediately(self, monkeypatch):
+        flushes = []
+        real = fabric._bump
+        monkeypatch.setattr(
+            fabric, "_bump",
+            lambda items, scopes=(): (flushes.append(items),
+                                      real(items, scopes)))
+        fabric.record("fabric.test.solo")
+        fabric.record("fabric.test.solo")
+        assert len(flushes) == 2

@@ -422,6 +422,86 @@ class TestAggregatorEdgeCases:
         assert roll.completed == 5 and roll.bases == 500
 
 
+# ----------------------------------------------------- full-read uplink ---
+class TestFullReadUplink:
+    """ROADMAP item 5 follow-up: an ACCEPT means the pore sequenced the
+    whole molecule, so the device can ship the *full* basecalled read, not
+    just the decision prefix — and the aggregator's pileup then actually
+    recovers seeded variants."""
+
+    def _device_and_truth(self, full: bool, seed: int = 7):
+        from repro.data import genome as G
+        from repro.field.device import EdgeDevice
+
+        rng = np.random.default_rng(5)
+        host = G.random_genome(rng, 1500)
+        sample, variants = G.mutate(rng, host, G.MutationProfile(
+            snp_rate=0.03, ins_rate=0.0, del_rate=0.0))
+        dev = EdgeDevice(0, sample, [(0, len(host))], channels=8, chunk=128,
+                         n_reads=32, read_len=(96, 160), seed=seed,
+                         full_reads=full)
+        return dev, host, sample, variants
+
+    def _recovered(self, dev, host, variants) -> tuple[int, int]:
+        from repro.core import pathogen
+        frames = dev.drain()
+        agg = AggregatorEngine(
+            pathogen.Panel.build(
+                {"px": np.random.default_rng(9).integers(
+                    1, 5, 300).astype(np.int32)}, with_index=False),
+            genome=host, pad_len=192)
+        for f in frames:
+            agg.submit(f)
+        agg.drain()
+        snp_pos = {v[0] for v in variants if v[1] == "SNP"}
+        sites = {int(s) for s in agg.variant_sites()}
+        nbases = sum(len(uplink.decode_read(f).bases) for f in frames
+                     if f.kind == uplink.KIND_READ)
+        return len(sites & snp_pos), nbases
+
+    def test_full_reads_recover_more_variants(self):
+        dev_f, host, _, variants = self._device_and_truth(True)
+        rec_full, nb_full = self._recovered(dev_f, host, variants)
+        dev_p, host, _, variants = self._device_and_truth(False)
+        rec_pref, nb_pref = self._recovered(dev_p, host, variants)
+        # same molecules, same decisions — only the uplinked payload grows
+        assert dev_f.accepted_reads == dev_p.accepted_reads > 0
+        assert dev_f.full_read_uplinks == dev_f.accepted_reads
+        assert nb_full > nb_pref
+        assert rec_full > rec_pref
+        assert rec_full > 0
+
+    def test_full_read_bases_match_molecule_exactly(self):
+        """The step codec decodes exactly: every uplinked full read equals
+        the molecule's true sequence (the decision prefix never did)."""
+        from repro.data.flowcell import STEP_SAMPLES_PER_BASE
+
+        dev, _, sample, _ = self._device_and_truth(True)
+        frames = [f for f in dev.drain() if f.kind == uplink.KIND_READ]
+        assert frames
+        src = dev.engine.flowcell
+        for f in frames:
+            dec = uplink.decode_read(f)
+            read = src.peek_read(dec.read_id)
+            length = len(read.signal) // STEP_SAMPLES_PER_BASE
+            truth = sample[read.position: read.position + length]
+            np.testing.assert_array_equal(dec.bases, truth)
+
+    def test_peek_read_rejects_uncaptured(self):
+        from repro.data.flowcell import FlowcellConfig, FlowcellSimulator
+
+        sim = FlowcellSimulator(
+            np.random.default_rng(0).integers(1, 5, 800).astype(np.int32),
+            FlowcellConfig(channels=2, n_reads=4, read_len=(20, 30),
+                           encoder="step"))
+        with pytest.raises(ValueError):
+            sim.peek_read(0)            # nothing captured yet
+        got = sim.next_read(0, 0)
+        peeked = sim.peek_read(got.read_id)
+        np.testing.assert_array_equal(peeked.signal, got.signal)
+        assert peeked.position == got.position
+
+
 # ----------------------------------------------------------- end to end ---
 @pytest.mark.slow
 def test_end_to_end_field_scenario(tmp_path):

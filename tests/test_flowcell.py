@@ -34,7 +34,7 @@ def _reference():
 
 def _engine(lanes, *, n_reads=24, pipeline_depth=1, fabric="reference",
             mesh=None, targets=((0, GENOME_LEN // 2),), min_mapq=4.0,
-            timeout_decision=Decision.ACCEPT):
+            timeout_decision=Decision.ACCEPT, fused=None):
     return engine_api.build(
         "adaptive_sampling", channels=lanes, chunk=64,
         reference=_reference(), targets=list(targets),
@@ -45,7 +45,8 @@ def _engine(lanes, *, n_reads=24, pipeline_depth=1, fabric="reference",
                             max_prefix_bases=96, min_mapq=min_mapq,
                             timeout_decision=timeout_decision,
                             eject_latency_samples=32),
-        fabric=fabric, mesh=mesh, pipeline_depth=pipeline_depth)
+        fabric=fabric, mesh=mesh, pipeline_depth=pipeline_depth,
+        fused=fused)
 
 
 def _golden(engine):
@@ -198,6 +199,69 @@ class TestLaneInvariance:
         assert eng.telemetry.completed == 8
 
 
+# ------------------------------------------------------- fused invariance --
+class TestFusedFlowcell:
+    """The fused persistent step (one dispatch for conv→CTC→policy inputs)
+    must be invisible to the per-read outcome: fused goldens equal unfused
+    goldens at every lane count, under double-buffering, and on the
+    interpret target — while collapsing the basecall path to one dispatch
+    per tick."""
+
+    def test_fused_goldens_match_unfused(self):
+        base = _engine(8)
+        base.drain(max_steps=20_000)
+        golden = _golden(base)
+        for lanes in (1, 8, 32):        # 1 lane: counted fallback path
+            eng = _engine(lanes, fused=True)
+            eng.drain(max_steps=20_000)
+            assert _golden(eng) == golden, f"fused lanes={lanes} diverged"
+
+    def test_fused_goldens_match_under_double_buffering(self):
+        sync = _engine(8, pipeline_depth=2)
+        sync.drain(max_steps=20_000)
+        piped = _engine(8, pipeline_depth=2, fused=True)
+        piped.drain(max_steps=20_000)
+        assert _golden(piped) == _golden(sync)
+
+    def test_fused_interpret_matches_reference(self):
+        ref = _engine(8, n_reads=12, fused=True)
+        ref.drain(max_steps=20_000)
+        interp = _engine(8, n_reads=12, fabric="pallas_interpret",
+                         fused=True)
+        interp.drain(max_steps=20_000)
+        assert _golden(interp) == _golden(ref)
+
+    def test_fused_collapses_basecall_dispatches(self):
+        """Unfused: conv1d + matmul dispatches every tick.  Fused: exactly
+        one fused_stream dispatch per tick, zero conv1d/matmul."""
+        from repro.kernels import fabric
+
+        def _dispatches(fused):
+            eng = _engine(8, n_reads=12, fused=fused)
+            base = fabric.counters()
+            eng.drain(max_steps=20_000)
+            delta = fabric.counters_delta(base)
+            by_op = {}
+            for k, v in delta.items():
+                if k.startswith("fabric.dispatch."):
+                    by_op[k.split(".")[2]] = by_op.get(k.split(".")[2], 0) + v
+            return by_op, eng.runtime._ticks
+
+        unfused, _ = _dispatches(False)
+        fused, ticks = _dispatches(True)
+        assert unfused.get("conv1d", 0) > 0
+        assert unfused.get("matmul", 0) > 0
+        assert fused.get("conv1d", 0) == 0
+        assert fused.get("matmul", 0) == 0
+        # one dispatch per tick, plus the single warmup trace
+        assert fused["fused_stream"] == ticks + 1
+
+    def test_flowcell_512_preset_opts_in(self):
+        presets = engine_api.presets("adaptive_sampling")
+        assert presets["flowcell_512"]["fused"] is True
+        assert presets["edge_int8"]["fused"] is True
+
+
 # ------------------------------------------------------- mesh invariance --
 _MESH_SCRIPT = r"""
 import os
@@ -213,6 +277,9 @@ for mesh in (None, 1, 2):
     eng = _engine(8, n_reads=12, mesh=mesh)
     eng.drain(max_steps=20_000)
     out[str(mesh)] = {{"golden": _golden(eng)}}
+    fused = _engine(8, n_reads=12, mesh=mesh, fused=True)
+    fused.drain(max_steps=20_000)
+    out[str(mesh)]["fused_golden"] = _golden(fused)
 
 # mesh="auto" trims to the largest device count dividing the lanes: never
 # a build error, falls back to unmeshed when nothing divides
@@ -241,6 +308,10 @@ def test_mesh_invariance_two_devices():
     out = json.loads(line[len("RESULT "):])
     assert out["None"]["golden"] == out["1"]["golden"] == out["2"]["golden"]
     assert len(out["2"]["golden"]) == 12
+    # the fused step under every mesh shape matches the unfused goldens
+    for mesh in ("None", "1", "2"):
+        assert out[mesh]["fused_golden"] == out["None"]["golden"], \
+            f"fused mesh={mesh} diverged"
 
 
 # ------------------------------------------------- flowcell-economy tests --

@@ -175,3 +175,136 @@ class TestSSD:
         y = ops.ssd_scan(x, la, b, c, chunk=8)
         exp = jnp.einsum("pts,pts->pt", c, b)[..., None] * x
         np.testing.assert_allclose(y, exp, rtol=2e-4, atol=2e-4)
+
+
+class TestFusedStream:
+    """Fused persistent streaming step (conv→CTC→counters in one program):
+    the interpret kernel, the reference composition, and the unfused chain
+    must agree bitwise on the exact-integer step codec."""
+
+    def _setup(self, lanes, chunk=64, seed=0, int8=False):
+        from repro.core import basecaller as bc
+        from repro.data import flowcell as fc
+        from repro.realtime import runtime as rt
+        cfg, params = fc.step_basecaller()
+        rng = np.random.default_rng(seed)
+        seq = rng.integers(1, 5, (lanes, chunk // fc.STEP_SAMPLES_PER_BASE))
+        rows = np.stack([fc.step_encode(s) for s in seq]).astype(np.float32)
+        if int8:
+            params = bc.quantize(params, cfg, chunks=[rows])
+        state = rt.init_lane_state(cfg, lanes)
+        state["prev_class"] = jnp.asarray(
+            rng.integers(0, 5, lanes).astype(np.int32))
+        state["bases"] = jnp.asarray(
+            rng.integers(0, 40, lanes).astype(np.int32))
+        state["ticks"] = jnp.asarray(
+            rng.integers(1, 9, lanes).astype(np.int32))
+        pads = np.zeros((lanes, chunk // cfg.total_stride), np.float32)
+        reset = np.zeros(lanes, np.float32)
+        return cfg, params, state, rows, pads, reset
+
+    @staticmethod
+    def _run(cfg, params, state, rows, pads, reset, fab):
+        from repro.kernels import fused_stream as fs
+        tokens, lens, new = fs.fused_stream_step(
+            params, state, jnp.asarray(rows), jnp.asarray(pads),
+            jnp.asarray(reset), cfg=cfg, fabric=fab)
+        jax.block_until_ready(tokens)
+        return tokens, lens, new
+
+    @staticmethod
+    def _assert_same(a, b):
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+        for la, lb in zip(jax.tree.leaves(a[2]), jax.tree.leaves(b[2])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    @pytest.mark.parametrize("lanes", [8, 32])
+    def test_interpret_matches_reference_bitwise(self, lanes):
+        cfg, params, state, rows, pads, reset = self._setup(lanes)
+        reset[:: max(lanes // 4, 1)] = 1.0
+        base = fabric.counters()
+        got = self._run(cfg, params, state, rows, pads, reset,
+                        "pallas_interpret")
+        want = self._run(cfg, params, state, rows, pads, reset, "reference")
+        self._assert_same(got, want)
+        d = fabric.counters_delta(base)
+        assert d.get("fabric.dispatch.fused_stream.pallas_interpret") == 1
+        assert d.get("fabric.dispatch.fused_stream.reference") == 1
+
+    @pytest.mark.parametrize("lanes", [1, 7])
+    def test_small_lane_counts_fall_back_counted(self, lanes):
+        cfg, params, state, rows, pads, reset = self._setup(lanes)
+        base = fabric.counters()
+        got = self._run(cfg, params, state, rows, pads, reset,
+                        "pallas_interpret")
+        want = self._run(cfg, params, state, rows, pads, reset, "reference")
+        self._assert_same(got, want)
+        d = fabric.counters_delta(base)
+        assert d.get("fabric.fallback.fused_stream.lanes_lt_8") == 1
+        assert d.get("fabric.dispatch.fused_stream.reference") == 2
+
+    @pytest.mark.parametrize("fab", ["reference", "pallas_interpret"])
+    def test_matches_unfused_step_with_host_reset(self, fab):
+        """reset folded inside the op == the runtime's host-side scatter
+        (zero the lane-state leaves) followed by the unfused step."""
+        from repro.kernels import fabric as fabric_mod
+        from repro.realtime import runtime as rt
+        cfg, params, state, rows, pads, reset = self._setup(16, seed=3)
+        reset[[2, 5, 11]] = 1.0
+        got = self._run(cfg, params, state, rows, pads, reset, fab)
+        idx = jnp.asarray([2, 5, 11])
+        zeroed = jax.tree.map(lambda s: s.at[idx].set(0), state)
+        step = rt.build_step_fn(cfg, fabric_mod.as_policy("reference"))
+        want = step(params, zeroed, jnp.asarray(rows), jnp.asarray(pads))
+        self._assert_same(got, want)
+
+    @pytest.mark.parametrize("fab", ["reference", "pallas_interpret"])
+    def test_lane_recycle_resets_stale_prev_class(self, fab):
+        """A recycled lane whose stale prev_class equals the new read's
+        first class must still emit that first base (BLANK reset inside
+        the kernel) — and its counters restart from zero."""
+        cfg, params, state, rows, pads, reset = self._setup(8, seed=1)
+        # lane 0's first encoded base: STEP_LEVELS[b] = 2*b
+        first = int(rows[0, 0] // 2)
+        assert first > 0
+        state["prev_class"] = state["prev_class"].at[0].set(first)
+        state["bases"] = state["bases"].at[0].set(17)
+        reset[0] = 1.0
+        tokens, lens, new = self._run(cfg, params, state, rows, pads,
+                                      reset, fab)
+        assert int(np.asarray(tokens)[0, 0]) == first
+        assert int(np.asarray(new["bases"])[0]) == int(np.asarray(lens)[0])
+        assert int(np.asarray(new["ticks"])[0]) == 1
+        # without the reset the stale carry suppresses the first base
+        reset[0] = 0.0
+        tokens2, _, _ = self._run(cfg, params, state, rows, pads, reset, fab)
+        assert int(np.asarray(tokens2)[0, 0]) != first
+
+    def test_int8_fused_matches_unfused_bitwise(self):
+        from repro.kernels import fabric as fabric_mod
+        from repro.realtime import runtime as rt
+        cfg, params, state, rows, pads, reset = self._setup(8, int8=True)
+        base = fabric.counters()
+        got_i = self._run(cfg, params, state, rows, pads, reset,
+                          "pallas_interpret")
+        got_r = self._run(cfg, params, state, rows, pads, reset, "reference")
+        self._assert_same(got_i, got_r)
+        step = rt.build_step_fn(cfg, fabric_mod.as_policy("reference"))
+        want = step(params, state, jnp.asarray(rows), jnp.asarray(pads))
+        self._assert_same(got_i, want)
+        d = fabric.counters_delta(base)
+        assert d.get("fabric.precision.fused_stream.int8", 0) >= 2
+
+    def test_dynamic_act_scale_falls_back_counted(self):
+        """Weight-only quantization (dynamic activation scales) cannot run
+        lane-blocked (absmax is a cross-lane reduction): counted fallback."""
+        from repro.core import basecaller as bc
+        from repro.data import flowcell as fc
+        cfg, params = fc.step_basecaller()
+        qparams = bc.quantize(params, cfg)          # no chunks: dynamic act
+        _, _, state, rows, pads, reset = self._setup(8)
+        base = fabric.counters()
+        self._run(cfg, qparams, state, rows, pads, reset, "pallas_interpret")
+        d = fabric.counters_delta(base)
+        assert d.get("fabric.fallback.fused_stream.int8_dynamic_act") == 1
