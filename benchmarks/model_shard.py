@@ -1,0 +1,124 @@
+"""Tensor-parallel lm_decode benchmark — the CI model-shard artifact.
+
+Replicated vs (data=1, model=2) serving of the same quantize-once int8
+model: decode tokens/s, per-device parameter bytes (the reason edge SoCs
+shard at all: each die holds 1/tp of the weights), parity vs the unsharded
+oracle (bitwise on the int8 path), and the checkpoint load split —
+``tp.load.pre_partitioned`` vs ``tp.load.replicated_slice`` counters when
+serving from a converted ``format: "sharded"`` checkpoint.
+
+Needs >= 2 devices (CI runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``); emits a skip row
+otherwise instead of failing the harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+
+import jax
+import jax.numpy as jnp
+
+ARCH = "qwen3-4b"
+DECODE_STEPS = 32
+PARITY_STEPS = 6
+
+
+def _param_bytes_per_device(params) -> int:
+    """Max bytes any single device holds (sharded leaves count 1/tp)."""
+    per_dev: dict = {}
+    for leaf in jax.tree_util.tree_leaves(params):
+        if hasattr(leaf, "addressable_shards"):
+            for s in leaf.addressable_shards:
+                per_dev[s.device] = per_dev.get(s.device, 0) + s.data.nbytes
+        else:
+            per_dev[None] = per_dev.get(None, 0) + leaf.nbytes
+    return max(per_dev.values())
+
+
+def _decode_tokens_per_s(eng, steps: int) -> float:
+    toks = jnp.zeros((eng.slots, 1), jnp.int32)
+    pos = jnp.zeros((eng.slots,), jnp.int32)
+    logits, eng.cache = eng._step(eng.params, eng.cache, toks, pos)  # warmup
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        logits, eng.cache = eng._step(eng.params, eng.cache, toks, pos)
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    return eng.slots * steps / dt
+
+
+def bench_model_shard(row, smoke: bool = False) -> None:
+    from repro import quant
+    from repro.configs import ARCHS
+    from repro.engine.registry import build
+    from repro.kernels import fabric
+    from repro.models.registry import get_model
+    from repro.train import checkpoint as ck
+    from checkpoint_converter import convert
+
+    if jax.device_count() < 2:
+        row("model_shard", 0.0,
+            f"skipped=1;devices={jax.device_count()} (need 2; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+        return
+
+    cfg = dataclasses.replace(ARCHS[ARCH].smoke_config(), dtype="float32")
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.key(0), cfg)
+    qp = quant.quantize_params(params, stack_dims=1)
+    steps = DECODE_STEPS // 2 if smoke else DECODE_STEPS
+
+    # the sharded checkpoint both engines could serve from
+    tmp = tempfile.mkdtemp(prefix="model_shard_")
+    full_dir = os.path.join(tmp, "full")
+    shard_dir = os.path.join(tmp, "tp2")
+    ck.save(full_dir, jax.device_get(qp), step=0)
+    convert(full_dir, shard_dir, tp=2, arch=ARCH, smoke=True)
+
+    eng_rep = build("lm_decode", model=model, params=qp, cfg=cfg,
+                    slots=4, max_len=64)
+    base = dict(fabric.counters())
+    eng_tp = build("lm_decode", model=model, cfg=cfg, slots=4, max_len=64,
+                   mesh=2, ckpt_dir=shard_dir)
+    load = {k: v - base.get(k, 0) for k, v in fabric.counters().items()
+            if k.startswith("tp.load.")}
+
+    # parity first (fresh caches on both): bitwise on the int8 path
+    toks = np.array([[3], [5], [7], [11]], np.int32)
+    pos = np.zeros((4,), np.int32)
+    bitwise = True
+    for _ in range(PARITY_STEPS):
+        lr, eng_rep.cache = eng_rep._step(eng_rep.params, eng_rep.cache,
+                                          jnp.asarray(toks), jnp.asarray(pos))
+        lt, eng_tp.cache = eng_tp._step(eng_tp.params, eng_tp.cache,
+                                        jnp.asarray(toks), jnp.asarray(pos))
+        bitwise &= bool(np.array_equal(np.asarray(lr), np.asarray(lt)))
+        pos += 1
+        toks = np.asarray(lr)[:, -1].argmax(-1)[:, None].astype(np.int32)
+
+    tps_rep = _decode_tokens_per_s(eng_rep, steps)
+    tps_tp = _decode_tokens_per_s(eng_tp, steps)
+    mb_rep = _param_bytes_per_device(eng_rep.params) / 1e6
+    mb_tp = _param_bytes_per_device(eng_tp.params) / 1e6
+
+    row("model_shard:replicated", 1e6 / tps_rep,
+        f"tokens_per_s={tps_rep:.0f};param_mb_per_device={mb_rep:.3f}")
+    row("model_shard:tp2", 1e6 / tps_tp,
+        f"tokens_per_s={tps_tp:.0f};param_mb_per_device={mb_tp:.3f}"
+        f";int8_bitwise_parity={int(bitwise)}"
+        f";pre_partitioned={load.get('tp.load.pre_partitioned', 0)}"
+        f";replicated_slice={load.get('tp.load.replicated_slice', 0)}")
+    row("model_shard:memory", 0.0,
+        f"device_param_reduction={mb_rep / mb_tp:.2f}x"
+        f";sharded_leaves={sum(1 for r in eng_tp.plan.flat.values() if r)}"
+        f"/{len(eng_tp.plan.flat)}")

@@ -35,6 +35,11 @@ quantity (bases/s, speedup, Mb/s, roofline fraction) each claim is about.
                          >= 1.5x the worse solo (idle-slot filling), the
                          CI fleet-smoke artifact (BENCH_fleet.json +
                          trace_fleet.json)
+  bench_model_shard      repro.distributed.tp: replicated vs (data=1,
+                         model=2) lm_decode — tokens/s, per-device param
+                         bytes, int8 bitwise parity, pre-partitioned
+                         checkpoint-load counters — the CI
+                         model-shard-smoke artifact (BENCH_models.json)
   bench_field            repro.field: N edge sequencers uplinking
                          compressed read frames through a lossy channel to
                          one aggregator — outbreak-detection latency,
@@ -249,6 +254,11 @@ def bench_field(smoke: bool = False):
     fdb.bench_field(row, smoke=smoke)
 
 
+def bench_model_shard(smoke: bool = False):
+    import model_shard as msb
+    msb.bench_model_shard(row, smoke=smoke)
+
+
 def bench_kernel_dispatch():
     """Compute fabric: each registered op on each target, with the
     dispatch/fallback counters the engine telemetry surfaces."""
@@ -397,6 +407,7 @@ def main() -> None:
         "flowcell": lambda: bench_flowcell(smoke=args.smoke),
         "fleet": lambda: bench_fleet(smoke=args.smoke),
         "field": lambda: bench_field(smoke=args.smoke),
+        "model_shard": lambda: bench_model_shard(smoke=args.smoke),
     }
     if args.only:
         selected = [n.strip() for n in args.only.split(",")]
@@ -407,11 +418,11 @@ def main() -> None:
     else:
         # adaptive and quant train a micro basecaller, flowcell sweeps up to
         # 512 channels, fleet sleeps through bursty arrival schedules, field
-        # compiles one engine per edge device — all skipped in smoke (run
-        # via --only)
+        # compiles one engine per edge device, model_shard needs a 2-device
+        # mesh — all skipped in smoke (run via --only)
         selected = [n for n in benches
                     if n not in ("adaptive", "quant", "flowcell", "fleet",
-                                 "field")
+                                 "field", "model_shard")
                     or not args.smoke]
 
     print("name,us_per_call,derived")

@@ -67,6 +67,7 @@ def default_rules(mesh: Mesh, *, fsdp: bool = False,
         "expert": "data" if expert_axis else None,
         "embed": d if fsdp else None,
         "ssm_inner": "model",
+        "ssm_heads": "model",
         "ssm_state": None,
         "seq": None,
         "act_embed": None,
@@ -124,8 +125,10 @@ def logical_spec(axes: tuple, shape: tuple | None = None) -> P:
         if not mesh_axes:
             entries.append(None)
             continue
-        extent = int(np.prod([ctx.mesh.shape[a] for a in mesh_axes]))
-        if shape is not None and shape[i] % extent != 0:
+        # NOTE: deliberately not named ``extent`` — that would shadow the
+        # module-level extent() helper for the rest of this function
+        axes_extent = int(np.prod([ctx.mesh.shape[a] for a in mesh_axes]))
+        if shape is not None and shape[i] % axes_extent != 0:
             entries.append(None)
             continue
         used.update(mesh_axes)

@@ -30,33 +30,126 @@ class Request:
     done_at: float = 0.0
 
 
+def _resolve_mesh(mesh):
+    """None | int tp degree | Mesh -> Mesh or None."""
+    if mesh is None or isinstance(mesh, jax.sharding.Mesh):
+        return mesh
+    tp_degree = int(mesh)
+    if tp_degree <= 1:
+        return None
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, tp_degree), ("data", "model"))
+
+
+# which dim of each cache leaf is model-sharded: k/v/conv shard their
+# packed feature dim (last), the ssm state its packed batch*heads rows
+_CACHE_TP_DIM = {"k": -1, "v": -1, "conv": -1, "ssm": 2}
+
+
 class LMDecodeEngine(EngineBase):
-    """Slot-based continuous batching around a jitted serve_step."""
+    """Slot-based continuous batching around a jitted serve_step.
+
+    ``mesh`` (a Mesh with a ``model`` axis, or an int tensor-parallel
+    degree) shards the model Megatron-style: params are partitioned per
+    :mod:`repro.distributed.tp`, the per-shard KV/SSM caches are created
+    inside shard_map (never materialized whole), and ``_step`` becomes a
+    shard_map'd serve with the gathered logits replicated on the host
+    side — the decode loop is byte-for-byte the replicated one.
+
+    ``ckpt_dir`` loads params from a checkpoint: a ``format: "sharded"``
+    checkpoint (from scripts/checkpoint_converter.py) loads
+    pre-partitioned — each device only ever receives its slice; a full
+    checkpoint is the migration path (replicated load, then slice)."""
 
     workload = "lm_decode"
 
     def __init__(self, model, params, cfg, *, slots: int, max_len: int,
-                 eos: int = -1, fabric=None, trace=False):
+                 eos: int = -1, fabric=None, trace=False, mesh=None,
+                 ckpt_dir=None, ckpt_step=None):
         from repro.kernels import fabric as fabric_mod
         super().__init__(slots=slots, tracer=trace)
         self.model = model
-        self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.eos = eos
         self.fabric = fabric_mod.as_policy(fabric)
-        self.cache = model.init_cache(cfg, slots, max_len)
+        self.mesh = _resolve_mesh(mesh)
+        self.tp = (int(self.mesh.shape.get("model", 1))
+                   if self.mesh is not None else 1)
+        self.plan = None
+        if self.tp > 1:
+            self._build_tensor_parallel(params, ckpt_dir, ckpt_step)
+        else:
+            if params is None and ckpt_dir is not None:
+                from repro.train import checkpoint as ck
+                params, _ = ck.load_params(ckpt_dir, step=ckpt_step)
+            self.params = params
+            self.cache = model.init_cache(cfg, slots, max_len)
+
+            def _serve(p, c, t, pos):
+                # model layers read the fabric policy at trace time; this
+                # jit is per-engine, so the placement is pinned per engine
+                with fabric_mod.use(self.fabric):
+                    return model.serve(p, c, t, pos, cfg)
+
+            self._step = jax.jit(_serve)
         self.pos = np.zeros((slots,), np.int32)
         self.budget = np.zeros((slots,), np.int32)  # remaining new tokens
         self.finished: list[Request] = []
 
+    def _build_tensor_parallel(self, params, ckpt_dir, ckpt_step):
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import sharding as shardlib
+        from repro.distributed import tp as tp_mod
+        from repro.kernels import fabric as fabric_mod
+        model, cfg, mesh, ext = self.model, self.cfg, self.mesh, self.tp
+        shapes, axes = model.abstract_params(cfg)
+        plan = tp_mod.build_plan(axes, shapes, cfg=cfg, tp=ext,
+                                 rules=shardlib.default_rules(mesh))
+        self.plan = plan
+        if params is None and ckpt_dir is not None:
+            from repro.train import checkpoint as ck
+            manifest, _ = ck._read_manifest(ckpt_dir, ckpt_step)
+            if manifest.get("format") == "sharded":
+                params = tp_mod.load_sharded_params(ckpt_dir, mesh, plan,
+                                                    step=ckpt_step)
+            else:
+                # migration path: full checkpoint, replicated then sliced
+                params, _ = ck.load_params(ckpt_dir, step=ckpt_step)
+                params = tp_mod.partition_params(params, mesh, plan)
+        elif params is not None:
+            params = tp_mod.partition_params(params, mesh, plan)
+        else:
+            raise ValueError("tensor-parallel engine needs params or "
+                             "ckpt_dir")
+        self.params = params
+
+        slots, max_len = self.scheduler.slots, self.max_len
+
+        def _local_cache():
+            with tp_mod.axis_ctx("model", ext):
+                return model.init_cache(cfg, slots, max_len)
+
+        with tp_mod.axis_ctx("model", ext):
+            cache_like = jax.eval_shape(_local_cache)
+        cache_specs = {
+            name: P(*("model" if i == _CACHE_TP_DIM[name] % leaf.ndim
+                      else None for i in range(leaf.ndim)))
+            for name, leaf in cache_like.items()}
+        self.cache = jax.jit(shardlib.shard_map_compat(
+            _local_cache, mesh, in_specs=(), out_specs=cache_specs))()
+
+        param_specs = tp_mod.param_pspecs(plan, params)
+
         def _serve(p, c, t, pos):
-            # model layers read the fabric policy at trace time; this jit is
-            # per-engine, so the placement is pinned per engine instance
-            with fabric_mod.use(self.fabric):
+            with fabric_mod.use(self.fabric), \
+                    tp_mod.axis_ctx("model", ext):
                 return model.serve(p, c, t, pos, cfg)
 
-        self._step = jax.jit(_serve)
+        self._step = jax.jit(shardlib.shard_map_compat(
+            _serve, mesh,
+            in_specs=(param_specs, cache_specs, P(), P()),
+            out_specs=(P(), cache_specs)))
 
     @property
     def slots(self) -> int:
@@ -153,9 +246,14 @@ class LMDecodeEngine(EngineBase):
 def build_lm_decode(model=None, params=None, cfg=None, *,
                     arch: str = "qwen3-4b", smoke: bool = True,
                     slots: int, max_len: int, eos: int = -1, fabric=None,
-                    seed: int = 0, trace=False):
+                    seed: int = 0, trace=False, mesh=None, ckpt_dir=None,
+                    ckpt_step=None):
     """Builder: supply (model, params, cfg) or let the preset pick an arch
-    (smoke config by default) and initialize fresh params."""
+    (smoke config by default) and initialize fresh params.
+
+    ``mesh`` (Mesh with a ``model`` axis, or an int tp degree) enables
+    tensor-parallel serving; ``ckpt_dir`` loads params from a checkpoint
+    (a sharded one loads pre-partitioned) instead of initializing."""
     if cfg is None:
         from repro.configs import ARCHS
         spec = ARCHS[arch]
@@ -163,7 +261,8 @@ def build_lm_decode(model=None, params=None, cfg=None, *,
     if model is None:
         from repro.models.registry import get_model
         model = get_model(cfg)
-    if params is None:
+    if params is None and ckpt_dir is None:
         params, _ = model.init(jax.random.key(seed), cfg)
     return LMDecodeEngine(model, params, cfg, slots=slots, max_len=max_len,
-                         eos=eos, fabric=fabric, trace=trace)
+                          eos=eos, fabric=fabric, trace=trace, mesh=mesh,
+                          ckpt_dir=ckpt_dir, ckpt_step=ckpt_step)

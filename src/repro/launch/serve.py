@@ -212,6 +212,16 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=None)
     ap.add_argument("--max-len", type=int, default=None)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel degree: shard the model over a "
+                         "(data=1, model=N) mesh (see repro.distributed.tp)")
+    ap.add_argument("--ckpt", default=None, metavar="DIR",
+                    help="load lm_decode params from a checkpoint dir; a "
+                         "format:\"sharded\" checkpoint (from "
+                         "scripts/checkpoint_converter.py) loads "
+                         "pre-partitioned")
+    ap.add_argument("--ckpt-step", type=int, default=None,
+                    help="checkpoint step to load (default: latest)")
     # observability (repro.obs)
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="export a Chrome trace-event JSON of the run")
@@ -246,6 +256,12 @@ def main() -> None:
         overrides["arch"] = args.arch
     if args.workload == "lm_decode":
         overrides["smoke"] = args.smoke
+        if args.tp is not None:
+            overrides["mesh"] = args.tp
+        if args.ckpt is not None:
+            overrides["ckpt_dir"] = args.ckpt
+            if args.ckpt_step is not None:
+                overrides["ckpt_step"] = args.ckpt_step
     if args.slots is not None:
         overrides["slots"] = args.slots
     if args.max_len is not None:

@@ -20,9 +20,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import tp
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
-from repro.models.layers import dense, fabric_wants_kernel, head_rmsnorm, rope
+from repro.models.layers import (dense, fabric_wants_kernel, head_rmsnorm,
+                                 rope, row_dense)
 from repro.models.param import ScopedBuilder
 
 
@@ -44,8 +46,10 @@ def _project_qkv(p, x, cfg: ModelConfig, positions, *, apply_rope=True,
     b, s, _ = x.shape
     # dense() routes QuantizedTensor projections onto the fabric's int8
     # matmul path; float weights keep the einsum exactly as before
+    # head counts come from the (possibly tensor-parallel-sliced) weight,
+    # not the config: under TP each shard owns num_heads/tp heads
     q = shard(dense(x, p["wq"]), "batch", None, "act_heads")
-    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    q = q.reshape(b, s, -1, cfg.head_dim)
     if cfg.qk_norm:
         q = head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
     if apply_rope:
@@ -54,8 +58,8 @@ def _project_qkv(p, x, cfg: ModelConfig, positions, *, apply_rope=True,
         return q, None, None
     k = shard(dense(x, p["wk"]), "batch", None, "act_heads")
     v = shard(dense(x, p["wv"]), "batch", None, "act_heads")
-    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
-    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    k = k.reshape(b, s, -1, cfg.head_dim)
+    v = v.reshape(b, s, -1, cfg.head_dim)
     if cfg.qk_norm:
         k = head_rmsnorm(p["k_norm"], k, cfg.norm_eps)
     if apply_rope:
@@ -201,16 +205,19 @@ def attention_block(p, x, cfg: ModelConfig, positions, *, causal=True,
         q = shard(q, "batch", "act_seq", None, None)
         out = full_attention(q, k, v, causal=causal, scale=scale)
         out = shard(out, "batch", "act_seq", None, None)
-    out = out.reshape(bsz, s, cfg.q_dim)
+    out = out.reshape(bsz, s, -1)
     out = shard(out, "batch", None, "act_heads")
-    return dense(out, p["wo"])
+    return row_dense(out, p["wo"], full_in=cfg.q_dim)
 
 
 # ------------------------------------------------------------- decode ----
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
                   dtype=jnp.bfloat16):
-    """Stacked KV cache for the attention layers of one layer stack."""
-    shape = (n_layers, batch, max_len, cfg.kv_dim)
+    """Stacked KV cache for the attention layers of one layer stack.
+
+    Under tensor parallelism (an active ``tp`` context) each shard caches
+    only its local KV heads: kv_dim/tp."""
+    shape = (n_layers, batch, max_len, cfg.kv_dim // tp.extent())
     return {
         "k": jnp.zeros(shape, dtype),
         "v": jnp.zeros(shape, dtype),
@@ -281,8 +288,8 @@ def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos,
     """
     bsz = x.shape[0]
     q, k, v = _project_qkv(p, x, cfg, pos[:, None])
-    kf = k.reshape(bsz, cfg.kv_dim)
-    vf = v.reshape(bsz, cfg.kv_dim)
+    kf = k.reshape(bsz, -1)   # (B, kv_dim) — or kv_dim/tp under TP
+    vf = v.reshape(bsz, -1)
     # in-place scatter at per-row pos: aliases with the donated cache (a
     # one-hot blend rewrites the whole cache -> 2x peak, measured)
     rows = jnp.arange(bsz)
@@ -290,8 +297,8 @@ def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos,
     new_v = cache_v.at[rows, pos].set(vf.astype(cache_v.dtype))
 
     s_max = cache_k.shape[1]
-    kc = new_k.reshape(bsz, s_max, cfg.num_kv_heads, cfg.head_dim)
-    vc = new_v.reshape(bsz, s_max, cfg.num_kv_heads, cfg.head_dim)
+    kc = new_k.reshape(bsz, s_max, -1, cfg.head_dim)
+    vc = new_v.reshape(bsz, s_max, -1, cfg.head_dim)
     scale = cfg.head_dim ** -0.5
 
     from repro.distributed import sharding as shardlib
@@ -320,5 +327,6 @@ def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos,
         logits = jnp.where(mask, logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
         out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
-    out = out.reshape(bsz, 1, cfg.q_dim).astype(x.dtype)
-    return dense(out, p["wo"]).astype(x.dtype), new_k, new_v
+    out = out.reshape(bsz, 1, -1).astype(x.dtype)
+    return (row_dense(out, p["wo"], full_in=cfg.q_dim).astype(x.dtype),
+            new_k, new_v)

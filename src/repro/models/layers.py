@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import sharding as shardlib
+from repro.distributed import tp
 from repro.distributed.sharding import shard
 from repro.kernels import fabric as fabric_mod
 from repro.models.config import ModelConfig
@@ -79,6 +80,50 @@ def dense(x: jax.Array, w, *, activation: str = "none") -> jax.Array:
     return _ACT[activation](h) if activation != "none" else h
 
 
+def row_dense(x: jax.Array, w, *, full_in: int) -> jax.Array:
+    """Row-parallel ``dense``: under tensor parallelism ``w`` holds only a
+    slice of its input dim and ``x`` the matching activation slice, so the
+    partial products need one all-reduce.  ``full_in`` is the unsharded
+    input width — when ``w`` still carries it (no TP, or a replicated
+    leaf), this is exactly :func:`dense`.
+
+    The int8 path all-reduces the **int32 accumulator** before the float
+    dequant epilogue and takes the dynamic activation absmax globally
+    (``pmax``), so sharded int8 results are bit-identical to the
+    single-device reference — integer partial sums commute exactly.
+    """
+    if tp.axis() is None or w.shape[0] >= full_in:
+        return dense(x, w)
+    if qcore.is_quantized(w):
+        return _row_parallel_int8(x, w)
+    return tp.psum(jnp.einsum("...d,df->...f", x, w))
+
+
+def _row_parallel_int8(x: jax.Array, w) -> jax.Array:
+    from repro.kernels import ops, ref
+    if w.axis is not None and w.axis % w.ndim != w.ndim - 1:
+        raise ValueError(
+            f"row_dense: per-channel scales must run along the output "
+            f"(last) weight axis, got axis={w.axis} for shape {w.shape}")
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    sa = w.act_scale
+    if sa is None:
+        # dynamic per-tensor act scale must be the *global* absmax — every
+        # shard quantizes its activation slice identically, matching the
+        # unsharded reference bit for bit
+        sa = qcore.symmetric_scale(tp.pmax(qcore.absmax(x2)))
+    else:
+        fabric_mod.record("fabric.precision.matmul.act_static")
+    aq = qcore.quantize(x2, sa)
+    fabric_mod.record("fabric.precision.matmul.int8")
+    fabric_mod.record("tp.row_parallel.matmul")
+    acc = tp.psum(ref.matmul(aq, w.q))  # int32 partials: exact reduction
+    scale = jnp.asarray(sa, jnp.float32) * jnp.asarray(w.scale, jnp.float32)
+    out = ops._int8_epilogue(acc, scale, None, "none", x.dtype)
+    return out.reshape(*lead, w.shape[-1])
+
+
 # ------------------------------------------------------------------ norm ---
 def init_rmsnorm(b: ScopedBuilder, dim: int):
     b.param("scale", (dim,), ("embed",), init="ones", dtype=jnp.float32)
@@ -102,6 +147,11 @@ def head_rmsnorm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """x: (..., S, H, D) rotary over D; positions: (..., S)."""
     d = x.shape[-1]
+    if d % 2:
+        raise ValueError(
+            f"rope requires an even head_dim, got {d}: the rotation pairs "
+            f"feature i with feature i + d//2, and an odd dim would "
+            f"silently drop the last feature")
     half = d // 2
     freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
     angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
@@ -126,6 +176,16 @@ def init_mlp(b: ScopedBuilder, cfg: ModelConfig):
 
 
 def mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    # tensor-parallel: wi/wi_gate are column-parallel (dense on the local
+    # slice, no collective), wo is row-parallel (psum folded into
+    # row_dense) — the fused kernel path below cannot host the all-reduce
+    if tp.axis() is not None and p["wo"].shape[0] < cfg.d_ff:
+        h = dense(x, p["wi"])
+        if cfg.mlp_gated:
+            h = dense(x, p["wi_gate"], activation=cfg.activation) * h
+        else:
+            h = _ACT[cfg.activation](h)
+        return row_dense(h, p["wo"], full_in=cfg.d_ff)
     # quantized weights force the ops path on any target (checked first so
     # fabric_wants_kernel does not also record a placement for this op);
     # under an active mesh they pin the shardable reference int8 path
@@ -166,14 +226,49 @@ def init_embedding(b: ScopedBuilder, cfg: ModelConfig):
 
 
 def embed(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
-    x = p["embed"][tokens]
+    w = p["embed"]
+    if tp.axis() is not None and w.shape[0] < cfg.vocab_size:
+        # vocab-parallel: each shard owns a contiguous vocab slice; rows
+        # outside it contribute exact zeros, so the psum reproduces the
+        # unsharded lookup bitwise
+        vl = w.shape[0]
+        local = tokens - tp.index() * vl
+        ok = (local >= 0) & (local < vl)
+        rows = w[jnp.clip(local, 0, vl - 1)]
+        x = tp.psum(jnp.where(ok[..., None], rows, jnp.zeros((), w.dtype)))
+    else:
+        x = w[tokens]
     return shard(x, "batch", None, "act_embed")
 
 
-def unembed(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def unembed(p, x: jax.Array, cfg: ModelConfig, *,
+            gather: bool = True) -> jax.Array:
     w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
     logits = jnp.einsum("bsd,dv->bsv", x, w)
     if cfg.logits_softcap > 0:
         c = cfg.logits_softcap
-        logits = c * jnp.tanh(logits / c)
+        logits = c * jnp.tanh(logits / c)  # elementwise: safe pre-gather
+    if (gather and tp.axis() is not None
+            and logits.shape[-1] < cfg.vocab_size):
+        logits = tp.all_gather_last(logits)
     return shard(logits, "batch", None, "vocab")
+
+
+def parallel_cross_entropy(local_logits: jax.Array,
+                           labels: jax.Array) -> jax.Array:
+    """Sharded-softmax NLL over vocab-sharded logits ``(..., V/tp)``.
+
+    The softmax statistics reduce across shards (pmax of maxes, psum of
+    sum-of-exp) and the label logit is fetched by the one shard owning it,
+    so the full logit row is never materialized — the standard memory
+    saving of a vocab-parallel loss."""
+    lf = local_logits.astype(jnp.float32)
+    vl = lf.shape[-1]
+    m = tp.pmax(jnp.max(lf, axis=-1))
+    se = tp.psum(jnp.sum(jnp.exp(lf - m[..., None]), axis=-1))
+    local = labels - tp.index() * vl if tp.axis() is not None else labels
+    ok = (local >= 0) & (local < vl)
+    picked = jnp.take_along_axis(lf, jnp.clip(local, 0, vl - 1)[..., None],
+                                 axis=-1)[..., 0]
+    label_logit = tp.psum(jnp.where(ok, picked, 0.0))
+    return m + jnp.log(se) - label_logit

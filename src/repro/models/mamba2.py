@@ -17,9 +17,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import tp
 from repro.distributed.sharding import shard
 from repro.models.config import ModelConfig
-from repro.models.layers import dense, fabric_wants_kernel
+from repro.models.layers import dense, fabric_wants_kernel, row_dense
 from repro.models.param import ScopedBuilder
 
 
@@ -30,20 +31,44 @@ def init_mamba(b: ScopedBuilder, cfg: ModelConfig):
     b.param("in_proj", (d, 2 * di + 2 * ds + nh), ("embed", "ssm_inner"))
     b.param("conv_w", (cfg.ssm_conv_width, conv_dim), (None, "ssm_inner"))
     b.param("conv_b", (conv_dim,), ("ssm_inner",), init="zeros")
-    b.param("A_log", (nh,), (None,), init="zeros", dtype=jnp.float32)
-    b.param("dt_bias", (nh,), (None,), init="zeros", dtype=jnp.float32)
-    b.param("D", (nh,), (None,), init="ones", dtype=jnp.float32)
+    b.param("A_log", (nh,), ("ssm_heads",), init="zeros", dtype=jnp.float32)
+    b.param("dt_bias", (nh,), ("ssm_heads",), init="zeros",
+            dtype=jnp.float32)
+    b.param("D", (nh,), ("ssm_heads",), init="ones", dtype=jnp.float32)
     b.param("norm_scale", (di,), ("ssm_inner",), init="ones",
             dtype=jnp.float32)
     b.param("out_proj", (di, d), ("ssm_inner", "embed"))
 
 
+def _local_dims(cfg: ModelConfig, proj_width: int) -> tuple[int, int, int]:
+    """(d_inner, ssm_state, heads) as held by *this* shard, recovered from
+    the in_proj output width: W = 2*di + 2*ds + nh with di = nh*dh, and
+    B/C (ds each) replicated under TP while z/x/dt shard by heads."""
+    ds, dh = cfg.ssm_state, cfg.ssm_head_dim
+    nh = (proj_width - 2 * ds) // (2 * dh + 1)
+    return nh * dh, ds, nh
+
+
 def _split_proj(cfg: ModelConfig, proj):
-    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    di, ds, nh = _local_dims(cfg, proj.shape[-1])
     z = proj[..., :di]
     xbc = proj[..., di: di + di + 2 * ds]
     dt = proj[..., -nh:]
     return z, xbc, dt
+
+
+def _gated_rmsnorm(y, z, scale, eps: float, full_di: int):
+    """RMSNorm(y) * silu(z) with the normalizer over the *global* d_inner:
+    under TP each shard holds di/tp features, so the sum of squares is
+    all-reduced and divided by the full width."""
+    yf = y.astype(jnp.float32)
+    if tp.axis() is not None and y.shape[-1] < full_di:
+        var = tp.psum(jnp.sum(jnp.square(yf), axis=-1,
+                              keepdims=True)) / full_di
+    else:
+        var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    out = (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+    return out * jax.nn.silu(z)
 
 
 def _causal_conv(xbc, w, bias):
@@ -101,11 +126,12 @@ def ssd_chunked(x, log_a, b, c, chunk: int, state0=None):
 def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
     """Train/prefill path.  x: (B, S, d) -> (y, (conv_state, ssm_state))."""
     bsz, s, _ = x.shape
-    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
     dh = cfg.ssm_head_dim
     # dense() routes QuantizedTensor projections onto the int8 matmul path
     proj = dense(x, p["in_proj"])
     proj = shard(proj, "batch", None, "act_mlp")
+    # local (per-shard) dims under TP; the full dims otherwise
+    di, ds, nh = _local_dims(cfg, proj.shape[-1])
     z, xbc, dt = _split_proj(cfg, proj)
     xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
     xin = xbc[..., :di]
@@ -148,25 +174,26 @@ def mamba_block(p, x, cfg: ModelConfig, *, conv_state=None, ssm_state=None):
     y = y.reshape(bsz, nh, s, dh).transpose(0, 2, 1, 3)
     y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
     y = y.reshape(bsz, s, di)
-    # gated RMSNorm then out-projection
-    yf = y.astype(jnp.float32)
-    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
-    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]).astype(
-        x.dtype)
-    y = y * jax.nn.silu(z)
-    out = dense(y, p["out_proj"])
+    # gated RMSNorm (global normalizer under TP) then out-projection
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps,
+                       cfg.ssm_d_inner)
+    out = row_dense(y, p["out_proj"], full_in=cfg.ssm_d_inner)
     new_conv_state = xbc_tail = None  # train path drops states
     return out, (new_conv_state, s_final)
 
 
 def init_mamba_cache(cfg: ModelConfig, batch: int, n_layers: int,
                      dtype=jnp.bfloat16):
-    di, ds = cfg.ssm_d_inner, cfg.ssm_state
+    """Under tensor parallelism each shard carries its nh/tp heads' state
+    (and the replicated B/C columns of the conv window)."""
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads // tp.extent()
+    di = nh * cfg.ssm_head_dim
     conv_dim = di + 2 * ds
     return {
         "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, conv_dim),
                           dtype),
-        "ssm": jnp.zeros((n_layers, batch * cfg.ssm_heads, ds,
+        "ssm": jnp.zeros((n_layers, batch * nh, ds,
                           cfg.ssm_head_dim), jnp.float32),
     }
 
@@ -175,9 +202,9 @@ def mamba_decode(p, x, cfg: ModelConfig, conv_state, ssm_state):
     """One-token decode.  x: (B, 1, d); conv_state: (B, K-1, conv_dim);
     ssm_state: (B*nh, ds, dh).  Returns (y, new_conv, new_ssm)."""
     bsz = x.shape[0]
-    di, ds, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
     dh = cfg.ssm_head_dim
     proj = dense(x, p["in_proj"])
+    di, ds, nh = _local_dims(cfg, proj.shape[-1])
     z, xbc_new, dt = _split_proj(cfg, proj)
     window = jnp.concatenate([conv_state.astype(x.dtype), xbc_new], axis=1)
     conv = sum(window[:, i] * p["conv_w"][i]
@@ -204,10 +231,7 @@ def mamba_decode(p, x, cfg: ModelConfig, conv_state, ssm_state):
     y = y.reshape(bsz, nh, dh) + (xh.reshape(bsz, nh, dh)
                                   * p["D"][None, :, None])
     y = y.reshape(bsz, 1, di).astype(x.dtype)
-    yf = y.astype(jnp.float32)
-    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
-    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]).astype(
-        x.dtype)
-    y = y * jax.nn.silu(z)
-    out = dense(y, p["out_proj"])
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps,
+                       cfg.ssm_d_inner)
+    out = row_dense(y, p["out_proj"], full_in=cfg.ssm_d_inner)
     return out, new_conv_state, new_ssm

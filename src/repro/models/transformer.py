@@ -21,6 +21,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import tp
 from repro.distributed.sharding import shard
 from repro.models import attention as attn
 from repro.models import layers as L
@@ -123,11 +124,14 @@ def _block_fn(block_params, x, cfg: ModelConfig, positions, aux):
 def apply(params, tokens: jax.Array, cfg: ModelConfig, *,
           input_embeds: Optional[jax.Array] = None,
           positions: Optional[jax.Array] = None,
-          last_logits_only: bool = False):
+          last_logits_only: bool = False,
+          gather_logits: bool = True):
     """tokens: (B, S) -> logits (B, S, V).  ``input_embeds`` (B, F, d)
     overrides the first F embedding rows (VLM/audio frontends).
     ``last_logits_only`` unembeds just the final position (prefill path —
-    a (B, 32k, 200k) logits tensor must never materialize)."""
+    a (B, 32k, 200k) logits tensor must never materialize).
+    ``gather_logits=False`` keeps vocab-sharded logits local under tensor
+    parallelism (the parallel-CE training path never needs the full row)."""
     x = L.embed(params["embedding"], tokens, cfg)
     if input_embeds is not None:
         f = input_embeds.shape[1]
@@ -170,16 +174,23 @@ def apply(params, tokens: jax.Array, cfg: ModelConfig, *,
     if last_logits_only:
         x = x[:, -1:]
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    logits = L.unembed(params["embedding"], x, cfg)
+    logits = L.unembed(params["embedding"], x, cfg, gather=gather_logits)
     return logits, aux
 
 
 def loss_fn(params, batch: dict, cfg: ModelConfig, *, aux_weight=0.01):
+    parallel_vocab = tp.axis() is not None
     logits, aux = apply(params, batch["tokens"], cfg,
-                        input_embeds=batch.get("input_embeds"))
+                        input_embeds=batch.get("input_embeds"),
+                        gather_logits=not parallel_vocab)
     labels = batch["labels"]
-    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if parallel_vocab and logits.shape[-1] < cfg.vocab_size:
+        # sharded-softmax parallel CE: softmax statistics all-reduce over
+        # the vocab shards, the full logit row never materializes
+        nll = L.parallel_cross_entropy(logits, labels)
+    else:
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
     mask = batch.get("loss_mask")
     if mask is None:
         loss = nll.mean()
@@ -191,15 +202,20 @@ def loss_fn(params, batch: dict, cfg: ModelConfig, *, aux_weight=0.01):
 
 # -------------------------------------------------------------- decode ---
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16) -> dict:
+               dtype=None) -> dict:
+    # cache dtype follows the model dtype (a float32 model must not round
+    # its KV/conv state through bfloat16), capped at bf16 for bf16 models
+    if dtype is None:
+        dtype = jnp.dtype(cfg.dtype)
     cache: dict[str, Any] = {}
     nb = cfg.num_blocks
     na = cfg.attn_layers_per_block
     nm = cfg.mamba_layers_per_block
     if na:
         kv = attn.init_kv_cache(cfg, batch, max_len, nb * na, dtype)
-        cache["k"] = kv["k"].reshape(nb, na, batch, max_len, cfg.kv_dim)
-        cache["v"] = kv["v"].reshape(nb, na, batch, max_len, cfg.kv_dim)
+        # trailing dim from the cache itself: kv_dim/tp under TP
+        cache["k"] = kv["k"].reshape((nb, na) + kv["k"].shape[1:])
+        cache["v"] = kv["v"].reshape((nb, na) + kv["v"].shape[1:])
     if nm:
         mc = mamba2.init_mamba_cache(cfg, batch, nb * nm, dtype)
         cache["conv"] = mc["conv"].reshape((nb, nm) + mc["conv"].shape[1:])

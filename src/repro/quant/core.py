@@ -49,8 +49,18 @@ def _broadcast_scale(scale, ndim: int, axis: Optional[int]):
     s = jnp.asarray(scale, jnp.float32)
     if axis is None or s.ndim == 0:
         return s
-    shape = [1] * ndim
-    shape[axis % ndim] = s.shape[0]
+    if s.ndim == 1:
+        shape = [1] * ndim
+        shape[axis % ndim] = s.shape[0]
+        return s.reshape(shape)
+    # stacked per-channel scale (see quantize_tensor stack_dims): the last
+    # scale dim runs along ``axis`` (payload's last dim), leading scale
+    # dims align with the payload's leading stack dims
+    if axis % ndim != ndim - 1:
+        raise ValueError(
+            f"stacked scale (ndim={s.ndim}) requires channel-last payload "
+            f"axis, got axis={axis} of {ndim}")
+    shape = list(s.shape[:-1]) + [1] * (ndim - s.ndim) + [s.shape[-1]]
     return s.reshape(shape)
 
 
@@ -118,11 +128,33 @@ class QuantizedTensor:
 
 
 def quantize_tensor(w: jax.Array, *, axis: Optional[int] = None,
-                    act_scale=None) -> QuantizedTensor:
-    """Quantize a float weight once: absmax -> scale -> int8."""
-    scale = symmetric_scale(absmax(w, axis))
+                    act_scale=None, stack_dims: int = 0) -> QuantizedTensor:
+    """Quantize a float weight once: absmax -> scale -> int8.
+
+    ``stack_dims > 0`` treats the leading dims as a parameter *stack*
+    (e.g. the transformer's leading num_blocks dim under ``lax.scan``):
+    per-channel scales are computed per stack entry, stored with shape
+    ``(*stack, C)`` and ``axis=-1`` — so scanning over the leading dim
+    peels payload and scale together and each block sees the plain
+    ``(C,)`` per-channel convention.
+    """
+    if stack_dims and axis is not None:
+        nd = w.ndim
+        if axis % nd != nd - 1:
+            raise ValueError(
+                f"stack_dims={stack_dims} requires channel-last axis, got "
+                f"axis={axis} of {nd}")
+        stack_dims = min(stack_dims, nd - 2)
+        reduce_axes = tuple(range(stack_dims, nd - 1))
+        amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=reduce_axes)
+        scale = symmetric_scale(amax)
+        axis = -1
+    else:
+        scale = symmetric_scale(absmax(w, axis))
     if act_scale is not None:
         act_scale = jnp.asarray(act_scale, jnp.float32)
+        if stack_dims and act_scale.ndim == 0:
+            act_scale = jnp.broadcast_to(act_scale, w.shape[:stack_dims])
     return QuantizedTensor(q=quantize(w, scale, axis=axis), scale=scale,
                            axis=axis, act_scale=act_scale)
 

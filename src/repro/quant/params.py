@@ -91,7 +91,8 @@ def select_weight_leaf(names, leaf, weight_keys=DEFAULT_WEIGHT_KEYS) -> bool:
 def quantize_params(params, calib: Optional[Calibration] = None, *,
                     weight_keys: frozenset = DEFAULT_WEIGHT_KEYS,
                     per_channel: bool = True,
-                    predicate: Optional[Callable] = None):
+                    predicate: Optional[Callable] = None,
+                    stack_dims: int = 0):
     """Replace weight leaves with int8 :class:`QuantizedTensor`s, once.
 
     ``calib``        optional :class:`Calibration`; a leaf under scope
@@ -101,6 +102,10 @@ def quantize_params(params, calib: Optional[Calibration] = None, *,
     ``per_channel``  one scale per output channel (last axis) vs per-tensor.
     ``predicate``    optional ``f(path_names, leaf) -> bool`` overriding the
                      key-name rule entirely.
+    ``stack_dims``   leading *stack* dims on every weight (the transformer's
+                     num_blocks dim): per-channel scales are computed per
+                     stack entry and stored ``(*stack, C)`` with ``axis=-1``
+                     so the params scan block-wise under ``lax.scan``.
 
     Biases and every other leaf pass through unchanged; the result is a
     pytree of the same structure, usable anywhere the float params were.
@@ -127,7 +132,8 @@ def quantize_params(params, calib: Optional[Calibration] = None, *,
             scope = names[-2] if len(names) >= 2 else names[-1]
             act_scale = calib.act_scale(scope)
         axis = leaf.ndim - 1 if per_channel else None
-        out.append(quantize_tensor(leaf, axis=axis, act_scale=act_scale))
+        out.append(quantize_tensor(leaf, axis=axis, act_scale=act_scale,
+                                   stack_dims=stack_dims))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
